@@ -1,0 +1,242 @@
+"""One benchmark per paper figure/table (§6).  Each returns a dict cached
+under results/bench/<name>.json; ``benchmarks.run`` prints the CSV."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from .common import Scenario, run_policies
+
+FAST_POLICIES = ["carbon-agnostic", "gaia", "wait-awhile", "carbonscaler",
+                 "carbonflex", "carbonflex-mpc", "oracle"]
+
+
+def fig6_cpu_cluster() -> dict:
+    """Fig. 6: CPU cluster — carbon emissions + delay across policies."""
+    return run_policies(Scenario(mode="cpu"))
+
+
+def fig7_gpu_cluster() -> dict:
+    """Fig. 7: GPU cluster — heterogeneous per-workload power."""
+    return run_policies(Scenario(mode="gpu", capacity=30, seed=9))
+
+
+def fig8_capacity() -> dict:
+    """Fig. 8: max cluster capacity M (75% / 50% / 37% utilization)."""
+    out = {}
+    for m, util in [(40, 0.75), (60, 0.5), (80, 0.375)]:
+        sc = Scenario(capacity=m, utilization=0.5 * 60 / m)
+        out[f"M={m}"] = run_policies(
+            sc, ["carbon-agnostic", "carbonscaler", "wait-awhile",
+                 "carbonflex", "carbonflex-mpc", "oracle"])
+    return out
+
+
+def fig9_delay() -> dict:
+    """Fig. 9: uniform slack d in {0, 6, 12, 24, 36} hours."""
+    out = {}
+    for d in [0, 6, 12, 24, 36]:
+        sc = Scenario(delay_override=d)
+        out[f"d={d}h"] = run_policies(
+            sc, ["carbon-agnostic", "wait-awhile", "carbonscaler",
+                 "carbonflex", "carbonflex-mpc", "oracle"])
+    return out
+
+
+def fig10_elasticity() -> dict:
+    """Fig. 10: high / moderate / low / mix / no-scaling workloads."""
+    out = {}
+    for el in ["high", "moderate", "low", "mix", "none"]:
+        sc = Scenario(elasticity=el)
+        out[el] = run_policies(
+            sc, ["carbon-agnostic", "wait-awhile", "carbonscaler",
+                 "carbonflex", "carbonflex-mpc", "oracle"])
+    return out
+
+
+def fig11_traces() -> dict:
+    """Fig. 11: Azure / Alibaba-PAI / SURF trace families."""
+    out = {}
+    for fam in ["azure", "alibaba", "surf"]:
+        out[fam] = run_policies(Scenario(family=fam),
+                                ["carbon-agnostic", "gaia", "wait-awhile",
+                                 "carbonflex", "carbonflex-mpc", "oracle"])
+    return out
+
+
+def fig12_locations() -> dict:
+    """Fig. 12: carbon savings across the 10 regions."""
+    from repro.core.carbon import REGIONS
+
+    out = {}
+    for region in REGIONS:
+        out[region] = run_policies(
+            Scenario(region=region),
+            ["carbon-agnostic", "carbonscaler", "carbonflex",
+             "carbonflex-mpc", "oracle"])
+    return out
+
+
+def fig13_shift() -> dict:
+    """Fig. 13: ±20% arrival-rate / job-length distribution shift between
+    the learning and evaluation phases."""
+    out = {}
+    for shift in [-0.2, -0.1, 0.0, 0.1, 0.2]:
+        sc = Scenario()
+        cluster, ci, spec, jobs, hist, ev, t0 = sc.build()
+        shifted = dataclasses.replace(
+            spec, length_scale=1 + shift, rate_scale=1 + shift,
+            seed=spec.seed + 99)
+        from repro.traces import generate_trace
+
+        ev_jobs = [j for j in generate_trace(shifted, cluster.queues)
+                   if t0 <= j.arrival < t0 + 24 * 7]
+        from repro.core import (CarbonFlexPolicy, KnowledgeBase, OraclePolicy,
+                                baselines, learn_window, simulate)
+
+        kb = KnowledgeBase()
+        learn_window(kb, hist, ci, 0, 24 * 7, cluster.capacity,
+                     len(cluster.queues),
+                     offsets=tuple(24 * 7 * i for i in range(sc.learn_weeks)),
+                     backend="numpy")
+        res = {}
+        for name, pol in [
+            ("carbon-agnostic", baselines.CarbonAgnosticPolicy()),
+            ("carbonflex", CarbonFlexPolicy(kb)),
+            ("oracle", OraclePolicy(backend="numpy")),
+        ]:
+            t = time.time()
+            r = simulate(ev_jobs, ci, cluster, pol, t0=t0, horizon=24 * 7)
+            res[name] = {"carbon_g": r.carbon_g, "mean_wait_h": r.mean_wait,
+                         "violation_rate": r.violation_rate,
+                         "runtime_s": round(time.time() - t, 2)}
+        base = res["carbon-agnostic"]["carbon_g"]
+        for m in res.values():
+            m["savings_pct"] = round(100 * (1 - m["carbon_g"] / base), 2)
+        out[f"shift={shift:+.0%}"] = res
+    return out
+
+
+def fig14_vcc() -> dict:
+    """Fig. 14 (§6.7): VCC / VCC(scaling) / CarbonFlex interop, d=24h."""
+    sc = Scenario(delay_override=24)
+    return run_policies(sc, ["carbon-agnostic", "vcc", "vcc-scaling",
+                             "carbonflex", "carbonflex-mpc", "oracle"])
+
+
+def tab_overheads() -> dict:
+    """§6.8 system overheads: oracle runtime, KNN match latency,
+    checkpoint/rescale cost."""
+    import jax
+
+    from repro.core import CarbonService, KnowledgeBase, learn_window
+    from repro.core.oracle import solve
+    from .common import Scenario
+
+    sc = Scenario()
+    cluster, ci, spec, jobs, hist, ev, t0 = sc.build()
+    out = {}
+
+    t = time.time()
+    res = solve([dataclasses.replace(j, arrival=j.arrival % (24 * 7))
+                 for j in hist[:600]], ci.trace[:24 * 7], cluster.capacity,
+                backend="numpy")
+    out["oracle_week_numpy_s"] = round(time.time() - t, 2)
+
+    t = time.time()
+    solve([dataclasses.replace(j, arrival=j.arrival % (24 * 7))
+           for j in hist[:600]], ci.trace[:24 * 7], cluster.capacity,
+          backend="jax")
+    out["oracle_week_jax_s"] = round(time.time() - t, 2)
+
+    kb = KnowledgeBase()
+    learn_window(kb, hist, ci, 0, 24 * 7, cluster.capacity, 3,
+                 offsets=(0, 24 * 7), backend="numpy")
+    state = np.concatenate([[250.0, 0.0, 0.5, 1.0, 1.0],
+                            np.ones(6), [1.0, 0.5]])
+    kb.query(state)                     # warm
+    t = time.time()
+    for _ in range(100):
+        kb.query(state)
+    out["knn_match_ms"] = round((time.time() - t) / 100 * 1e3, 3)
+
+    # checkpoint save/restore (the paper's scancel/restore analogue)
+    import tempfile
+
+    from repro.configs import ARCHS, reduced
+    from repro.train import CheckpointManager, init_state
+
+    cfg = reduced(ARCHS["llama3-8b"])
+    st = init_state(cfg, jax.random.key(0))
+    with tempfile.TemporaryDirectory() as d:
+        cm = CheckpointManager(d)
+        t = time.time()
+        cm.save(1, st, blocking=True)
+        out["checkpoint_save_s"] = round(time.time() - t, 3)
+        t = time.time()
+        cm.restore(jax.eval_shape(lambda: st))
+        out["checkpoint_restore_s"] = round(time.time() - t, 3)
+    return out
+
+
+def tpu_cluster() -> dict:
+    """Beyond-paper capstone: CarbonFlex managing the 10 assigned
+    architectures as elastic TPU training jobs, with scaling profiles
+    derived from each arch's compiled dry-run roofline terms (DESIGN.md
+    §7) — the loop between the scheduling layer and the training substrate
+    closed end-to-end."""
+    sc = Scenario(elasticity="tpu", capacity=48)
+    return run_policies(sc, ["carbon-agnostic", "wait-awhile", "carbonscaler",
+                             "carbonflex", "carbonflex-mpc", "oracle"])
+
+
+def fault_sensitivity() -> dict:
+    """Beyond-paper: carbon savings under injected stragglers/failures —
+    the Algorithm-2 violation-feedback loop absorbing degraded slots."""
+    import time as _t
+
+    from repro.core.policy import CarbonFlexMPCPolicy
+    from repro.core.simulator import FaultModel
+    from repro.core import baselines, simulate
+
+    sc = Scenario(capacity=40)
+    cluster, ci, spec, jobs, hist, ev, t0 = sc.build()
+    out = {}
+    for rate in [0.0, 0.1, 0.2]:
+        res = {}
+        for name, mk in [("carbon-agnostic", baselines.CarbonAgnosticPolicy),
+                         ("carbonflex-mpc", CarbonFlexMPCPolicy)]:
+            pol = mk()
+            if name == "carbonflex-mpc":
+                pol.warm_start(hist)
+            t = _t.time()
+            r = simulate(ev, ci, cluster, pol, t0=t0, horizon=24 * 7,
+                         faults=FaultModel(straggler_rate=rate,
+                                           failure_rate=rate / 4, seed=5)
+                         if rate else None)
+            res[name] = {"carbon_g": r.carbon_g, "mean_wait_h": r.mean_wait,
+                         "violation_rate": r.violation_rate,
+                         "runtime_s": round(_t.time() - t, 2)}
+        base = res["carbon-agnostic"]["carbon_g"]
+        for m in res.values():
+            m["savings_pct"] = round(100 * (1 - m["carbon_g"] / base), 2)
+        out[f"straggler={rate:.0%}"] = res
+    return out
+
+
+ALL = {
+    "fig6_cpu_cluster": fig6_cpu_cluster,
+    "fig7_gpu_cluster": fig7_gpu_cluster,
+    "fig8_capacity": fig8_capacity,
+    "fig9_delay": fig9_delay,
+    "fig10_elasticity": fig10_elasticity,
+    "fig11_traces": fig11_traces,
+    "fig12_locations": fig12_locations,
+    "fig13_shift": fig13_shift,
+    "fig14_vcc": fig14_vcc,
+    "tab_overheads": tab_overheads,
+    "tpu_cluster": tpu_cluster,
+    "fault_sensitivity": fault_sensitivity,
+}

@@ -1,0 +1,69 @@
+"""Roofline report (deliverable g): reads the dry-run JSONs and prints the
+per-(arch x shape x mesh) three-term table + dominant bottleneck.
+
+Run the dry-run first:
+  PYTHONPATH=src python -m repro.launch.dryrun --both-meshes
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+DRYRUN_OPT_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                              "dryrun_opt")
+
+
+def load_cells(mesh: str | None = None, directory: str | None = None) -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(directory or DRYRUN_DIR, "*.json"))):
+        d = json.load(open(path))
+        if mesh and d["mesh"] != mesh:
+            continue
+        cells.append(d)
+    return cells
+
+
+def report(mesh: str = "16x16") -> list[str]:
+    rows = []
+    header = (f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+              f"{'collect_s':>10s} {'dominant':>10s} {'useful':>7s} {'GiB/dev':>8s}")
+    rows.append(header)
+    for d in load_cells(mesh):
+        r = d["roofline"]
+        mem = d["memory"]
+        gib = ((mem["peak_bytes"] or 0) + (mem["argument_bytes"] or 0)) / 2**30
+        useful = r["useful_flops_ratio"]
+        rows.append(
+            f"{d['arch']:24s} {d['shape']:12s} {r['compute_s']:10.3f} "
+            f"{r['memory_s']:10.3f} {r['collective_s']:10.3f} "
+            f"{r['dominant']:>10s} "
+            f"{useful if useful is None else format(useful, '.2f'):>7} "
+            f"{gib:8.2f}")
+    return rows
+
+
+def csv_rows() -> list[str]:
+    out = []
+    variants = [("roofline", None)]
+    if os.path.isdir(DRYRUN_OPT_DIR):
+        variants.append(("roofline_opt", DRYRUN_OPT_DIR))
+    for prefix, directory in variants:
+        for d in load_cells(directory=directory):
+            r = d["roofline"]
+            dom = r["dominant"]
+            dom_s = r[f"{dom}_s"]
+            frac = (r["model_flops_per_dev"] / 197e12) / max(dom_s, 1e-12)
+            out.append(
+                f"{prefix}/{d['arch']}/{d['shape']}/{d['mesh']},"
+                f"{d['compile_s'] * 1e6:.0f},"
+                f"dominant={dom};compute_s={r['compute_s']:.3f};"
+                f"memory_s={r['memory_s']:.3f};collective_s={r['collective_s']:.3f};"
+                f"roofline_frac={frac:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    for line in report():
+        print(line)

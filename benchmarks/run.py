@@ -1,0 +1,45 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One benchmark per paper table/figure (see figures.ALL) + the roofline
+report.  Prints ``name,us_per_call,derived`` CSV.  Results are cached in
+results/bench/ — pass ``--force`` to recompute, ``--only fig6`` to filter.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    from . import figures, roofline
+    from .common import cached, csv_rows
+
+    print("name,us_per_call,derived")
+    for name, fn in figures.ALL.items():
+        if args.only and args.only not in name:
+            continue
+        try:
+            res = cached(name, lambda fn=fn: fn(), force=args.force)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},0,ERROR={e!r}", file=sys.stderr)
+            continue
+        if name == "tab_overheads":
+            for k, v in res.items():
+                if not k.startswith("_"):
+                    print(f"{name}/{k},{float(v) * 1e6:.0f},seconds={v}")
+            continue
+        for row in csv_rows(name, res):
+            print(row)
+    if not args.skip_roofline and not args.only:
+        for row in roofline.csv_rows():
+            print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Quickstart: CarbonFlex end-to-end on a synthetic cluster.
+
+Learns provisioning/scheduling from 3 weeks of history (continuous
+learning over the offline oracle), then manages a 1-week evaluation
+window, comparing against the carbon-agnostic status quo and the oracle.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (CarbonFlexPolicy, CarbonService, ClusterConfig,
+                        KnowledgeBase, OraclePolicy, baselines, learn_window,
+                        simulate)
+from repro.core.policy import CarbonFlexMPCPolicy
+from repro.traces import TraceSpec, generate_trace
+
+WEEK = 24 * 7
+
+
+def main() -> None:
+    cluster = ClusterConfig.default(capacity=40)
+    ci = CarbonService.synthetic("south-australia", WEEK * 5, seed=1)
+    spec = TraceSpec(family="azure", hours=WEEK * 4, capacity=40, seed=2)
+    jobs = generate_trace(spec, cluster.queues)
+    hist = [j for j in jobs if j.arrival < WEEK * 3]
+    ev = [j for j in jobs if WEEK * 3 <= j.arrival < WEEK * 4]
+    print(f"{len(hist)} historical jobs, {len(ev)} evaluation jobs, "
+          f"M={cluster.capacity}")
+
+    # --- learning phase: replay history through the offline oracle --------
+    kb = KnowledgeBase()
+    learn_window(kb, hist, ci, 0, WEEK, cluster.capacity,
+                 len(cluster.queues), offsets=(0, WEEK, 2 * WEEK))
+    print(f"knowledge base: {len(kb)} (STATE -> m, rho) cases")
+
+    # --- execution phase ---------------------------------------------------
+    mpc = CarbonFlexMPCPolicy()
+    mpc.warm_start(hist)
+    policies = [
+        baselines.CarbonAgnosticPolicy(),
+        baselines.WaitAwhilePolicy(),
+        CarbonFlexPolicy(kb),
+        mpc,
+        OraclePolicy(),
+    ]
+    results = {}
+    for pol in policies:
+        results[pol.name] = simulate(ev, ci, cluster, pol,
+                                     t0=WEEK * 3, horizon=WEEK)
+    base = results["carbon-agnostic"]
+    print(f"\n{'policy':18s} {'carbon kg':>10s} {'savings':>8s} "
+          f"{'wait h':>7s} {'viol':>6s}")
+    for name, r in results.items():
+        print(f"{name:18s} {r.carbon_g / 1e3:10.1f} "
+              f"{r.savings_vs(base):7.1f}% {r.mean_wait:7.1f} "
+              f"{r.violation_rate:6.3f}")
+
+
+if __name__ == "__main__":
+    main()

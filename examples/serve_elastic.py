@@ -1,0 +1,78 @@
+"""End-to-end serving driver: batched decode with a KV cache.
+
+Serves a small dense LM: a prefill pass builds the sequence-sharded KV
+cache for a batch of prompts, then batched decode steps generate new
+tokens — the ``serve_step`` lowered by the decode_* dry-run cells, run for
+real at CPU scale.
+
+  PYTHONPATH=src python examples/serve_elastic.py --tokens 32
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, reduced
+from repro.models import LogicalRules, forward, init_params
+from repro.serve import init_cache, make_prefill, make_serve_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b", choices=sorted(ARCHS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = reduced(ARCHS[args.arch])
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rules = LogicalRules(mesh)
+    params = init_params(cfg, jax.random.key(0))
+    max_seq = args.prompt_len + args.tokens
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)
+
+    step = jax.jit(make_serve_step(cfg, rules))
+    prefill = jax.jit(make_prefill(cfg, rules, max_seq))
+
+    # prefill: one forward pass builds the KV cache for the whole prompt
+    t0 = time.time()
+    logits, cache = prefill(params, prompts)
+    jax.block_until_ready(logits)
+    t_prefill = time.time() - t0
+
+    # batched decode: greedy sampling
+    generated = []
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t0 = time.time()
+    for _ in range(args.tokens):
+        generated.append(tok)
+        logits, cache = step(params, cache, tok)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    jax.block_until_ready(logits)
+    t_decode = time.time() - t0
+
+    gen = np.stack([np.asarray(g) for g in generated], axis=1)
+    print(f"arch {cfg.name} batch {args.batch} prompt {args.prompt_len} "
+          f"-> {args.tokens} new tokens")
+    print(f"prefill {t_prefill:.2f}s  decode {t_decode:.2f}s "
+          f"({args.tokens * args.batch / max(t_decode, 1e-9):.1f} tok/s)")
+    print("first sequence:", gen[0][:16], "...")
+    assert gen.shape == (args.batch, args.tokens)
+    assert (gen >= 0).all() and (gen < cfg.vocab_size).all()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Dev harness: consistent in-process A/B of CarbonFlexPolicy variants.
+
+Usage: PYTHONPATH=src python scripts/tune_policy.py [--quick]
+"""
+import sys
+
+import numpy as np
+
+from repro.core import (CarbonService, ClusterConfig, KnowledgeBase,
+                        CarbonFlexPolicy, OraclePolicy, learn_window,
+                        simulate, baselines)
+from repro.core.policy import CarbonFlexMPCPolicy
+from repro.traces import TraceSpec, generate_trace, mean_length
+
+
+def setup(region="south-australia", family="azure", capacity=150, seed=1):
+    cluster = ClusterConfig.default(capacity=capacity)
+    hours = 24 * 7 * 4
+    ci = CarbonService.synthetic(region, hours + 24 * 30, seed=seed)
+    spec = TraceSpec(family=family, hours=hours, capacity=capacity, seed=seed + 1)
+    jobs = generate_trace(spec, cluster.queues)
+    eval_jobs = [j for j in jobs if 24 * 21 <= j.arrival < 24 * 28]
+    return cluster, ci, spec, jobs, eval_jobs
+
+
+def run_variants(variants, region="south-australia", seed=1):
+    cluster, ci, spec, jobs, eval_jobs = setup(region=region, seed=seed)
+    base = simulate(eval_jobs, ci, cluster, baselines.CarbonAgnosticPolicy(),
+                    t0=24 * 21, horizon=24 * 7)
+    orc = simulate(eval_jobs, ci, cluster, OraclePolicy(backend="numpy"),
+                   t0=24 * 21, horizon=24 * 7)
+    print(f"[{region} seed={seed}] oracle {orc.savings_vs(base):6.2f}%  wait {orc.mean_wait:.1f}")
+    out = {}
+    mpc = simulate(eval_jobs, ci, cluster, CarbonFlexMPCPolicy(), t0=24 * 21, horizon=24 * 7)
+    print(f"  {'carbonflex-mpc':28s} savings {mpc.savings_vs(base):6.2f}%  wait {mpc.mean_wait:5.1f}"
+          f"  viol {mpc.violation_rate:.3f}")
+    for name, kb_kwargs in variants.items():
+        kb = KnowledgeBase(**kb_kwargs)
+        learn_window(kb, jobs, ci, 0, 24 * 7, cluster.capacity, 3,
+                     offsets=(0, 24 * 7, 24 * 14), backend="numpy")
+        r = simulate(eval_jobs, ci, cluster, CarbonFlexPolicy(kb),
+                     t0=24 * 21, horizon=24 * 7)
+        ms = np.array([s.provisioned for s in r.slots])
+        cis = np.array([s.ci for s in r.slots])
+        print(f"  {name:28s} savings {r.savings_vs(base):6.2f}%  wait {r.mean_wait:5.1f}"
+              f"  viol {r.violation_rate:.3f}  corr {np.corrcoef(ms, cis)[0, 1]:6.3f}")
+        out[name] = r.savings_vs(base)
+    return out
+
+
+if __name__ == "__main__":
+    variants = {
+        "ci-only (bw=0)": dict(backlog_weight=0.0),
+        "rel-backlog bw=1": dict(backlog_weight=1.0),
+        "rel-backlog bw=2": dict(backlog_weight=2.0),
+        "bw=1 + qw=0.2": dict(backlog_weight=1.0, queue_weight=0.2),
+        "bw=1 + aw=0.5": dict(backlog_weight=1.0, arrival_weight=0.5),
+    }
+    seeds = [1] if "--quick" in sys.argv else [1, 3]
+    for seed in seeds:
+        run_variants(variants, seed=seed)

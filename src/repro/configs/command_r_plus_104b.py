@@ -1,0 +1,15 @@
+"""command-r-plus-104b [dense] — GQA, no-bias (hf:CohereForAI/c4ai-command-r-v01).
+
+104B params: moments are kept in bf16 so params+Adam fit one 256-chip
+v5e pod (see DESIGN.md §9).
+"""
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-plus-104b", family="dense",
+    num_layers=64, d_model=12288, num_heads=96, num_kv_heads=8,
+    d_ff=33792, vocab_size=256000,
+    param_dtype=jnp.bfloat16, moment_dtype=jnp.bfloat16,
+)

@@ -1,0 +1,20 @@
+"""CarbonFlex core: the paper's contribution as a composable library.
+
+Public surface:
+
+- ``oracle.solve``                 — Algorithm 1 (offline optimal)
+- ``knowledge.KnowledgeBase``      — Table-2 state -> (m, rho) case base
+- ``provisioning.provision``       — Algorithm 2 (phi)
+- ``scheduling.schedule``          — Algorithm 3 (psi)
+- ``policy.CarbonFlexPolicy``      — the runtime resource manager
+- ``policy.learn_window``          — the continuous-learning phase
+- ``simulator.simulate``           — the CarbonFlex-Simulator engine
+- ``baselines``                    — §6 baselines (agnostic/GAIA/WaitAwhile/
+                                     CarbonScaler/VCC)
+"""
+from . import baselines, carbon, emissions, knowledge, oracle, policy, profiles, provisioning, scheduling, simulator, types  # noqa: F401
+from .carbon import CarbonService, synthesize_trace  # noqa: F401
+from .knowledge import KnowledgeBase  # noqa: F401
+from .policy import CarbonFlexPolicy, OraclePolicy, learn_window  # noqa: F401
+from .simulator import simulate  # noqa: F401
+from .types import ClusterConfig, Job, QueueConfig, SimResult  # noqa: F401

@@ -1,0 +1,202 @@
+"""CarbonFlex offline oracle — Algorithm 1 of the paper.
+
+Greedy carbon-optimal scheduling: enumerate ``(job, slot, scale)`` triples,
+score each by marginal throughput per unit carbon ``p_j(k) / CI_t``, sort
+descending (ties broken by earliest deadline), and allocate greedily subject
+to the cluster capacity ``M``.  Optimal for monotonically decreasing
+marginal-throughput profiles on homogeneous clusters (Theorem 4.1, via
+Federgruen & Groenevelt's greedy resource-allocation result).
+
+We interpret each list entry *incrementally*: the entry ``(j, t, k)`` raises
+job j's allocation in slot t from ``k-1`` to ``k`` (the base entry
+``k = k_min`` raises 0 -> k_min).  Because profiles are monotone decreasing,
+the sorted order guarantees the ``k-1`` entry is considered before ``k`` for
+the same slot, so the greedy pass visits allocations in a consistent order.
+
+Two implementations, tested to agree:
+
+- ``solve_numpy``   — readable reference, plain numpy;
+- ``solve_jax``     — the same greedy pass as a ``lax.fori_loop`` jitted
+                      scan over the pre-sorted entry arrays (fast path used
+                      by the continuous-learning loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .types import Job, Schedule
+
+_EPS = 1e-9
+
+
+@dataclasses.dataclass
+class OracleResult:
+    schedule: Schedule
+    capacity_curve: np.ndarray       # m_t (decision output, Table 2)
+    rho_curve: np.ndarray            # rho_t: lowest scheduled marginal throughput
+    work_done: np.ndarray            # per-job completed work
+
+
+def _build_entries(jobs: list[Job], ci: np.ndarray, horizon: int):
+    """Flattened (job, slot, scale) entry arrays, sorted by the greedy key.
+
+    Returns int32/float64 arrays: j_idx, t_idx, k_val, gain (marginal
+    throughput), in greedy order (score desc, deadline asc, stable).
+    """
+    js, ts, ks, gains, scores, deadlines = [], [], [], [], [], []
+    for idx, job in enumerate(jobs):
+        t0 = max(0, job.arrival)
+        t1 = min(horizon, job.deadline + 1)
+        if t1 <= t0:
+            continue
+        trange = np.arange(t0, t1, dtype=np.int64)
+        civ = ci[trange]
+        for k in range(job.k_min, job.k_max + 1):
+            p = job.marginal(k)
+            if p <= 0:
+                continue
+            js.append(np.full(len(trange), idx, dtype=np.int64))
+            ts.append(trange)
+            ks.append(np.full(len(trange), k, dtype=np.int64))
+            gains.append(np.full(len(trange), p))
+            scores.append(p / civ)
+            deadlines.append(np.full(len(trange), job.deadline, dtype=np.int64))
+    if not js:
+        z = np.zeros(0, dtype=np.int64)
+        return z, z, z, np.zeros(0), np.zeros(0)
+    j_idx = np.concatenate(js)
+    t_idx = np.concatenate(ts)
+    k_val = np.concatenate(ks)
+    gain = np.concatenate(gains)
+    score = np.concatenate(scores)
+    deadline = np.concatenate(deadlines)
+    # Sort: score desc, then deadline asc (earliest-deadline tie-break, line 6).
+    order = np.lexsort((deadline, -score))
+    return j_idx[order], t_idx[order], k_val[order], gain[order], score[order]
+
+
+def _greedy_numpy(jobs, ci, capacity, horizon, lengths, k_extra):
+    j_idx, t_idx, k_val, gain, _ = _build_entries(jobs, ci, horizon)
+    n = len(jobs)
+    alloc = np.zeros((n, horizon), dtype=np.int64)
+    used = np.zeros(horizon, dtype=np.int64)
+    work = np.zeros(n)
+    kmin = np.array([j.k_min for j in jobs], dtype=np.int64)
+    for i in range(len(j_idx)):
+        j, t, k, g = j_idx[i], t_idx[i], k_val[i], gain[i]
+        if work[j] >= lengths[j] - _EPS:
+            continue  # line 11: job already done
+        prev = alloc[j, t]
+        need_prev = kmin[j] if k == kmin[j] else k  # base entry adds k_min servers
+        add = kmin[j] if k == kmin[j] else 1
+        if (k == kmin[j] and prev != 0) or (k != kmin[j] and prev != k - 1):
+            continue  # incremental consistency
+        if used[t] + add > capacity:
+            continue  # line 9: capacity exceeded
+        alloc[j, t] = k
+        used[t] += add
+        work[j] += g if k != kmin[j] else 1.0  # base throughput p(k_min)=1
+    return alloc, used, work
+
+
+@partial(jax.jit, static_argnames=("capacity", "n", "horizon"))
+def _greedy_jax(j_idx, t_idx, k_val, gain, kmin, lengths, capacity, n, horizon):
+    """The same greedy pass as a fori_loop over pre-sorted entries."""
+
+    def body(i, state):
+        alloc, used, work = state
+        j, t, k, g = j_idx[i], t_idx[i], k_val[i], gain[i]
+        prev = alloc[j, t]
+        is_base = k == kmin[j]
+        add = jnp.where(is_base, kmin[j], 1)
+        consistent = jnp.where(is_base, prev == 0, prev == k - 1)
+        ok = (
+            (work[j] < lengths[j] - _EPS)
+            & consistent
+            & (used[t] + add <= capacity)
+        )
+        gain_i = jnp.where(is_base, 1.0, g)
+        alloc = alloc.at[j, t].set(jnp.where(ok, k, prev))
+        used = used.at[t].add(jnp.where(ok, add, 0))
+        work = work.at[j].add(jnp.where(ok, gain_i, 0.0))
+        return alloc, used, work
+
+    alloc0 = jnp.zeros((n, horizon), dtype=jnp.int32)
+    used0 = jnp.zeros(horizon, dtype=jnp.int32)
+    work0 = jnp.zeros(n, dtype=jnp.float32)
+    return jax.lax.fori_loop(0, len(j_idx), body, (alloc0, used0, work0))
+
+
+def _greedy(jobs, ci, capacity, horizon, lengths, backend):
+    if backend == "numpy":
+        return _greedy_numpy(jobs, ci, capacity, horizon, lengths, None)
+    j_idx, t_idx, k_val, gain, _ = _build_entries(jobs, ci, horizon)
+    kmin = np.array([j.k_min for j in jobs], dtype=np.int32)
+    if len(j_idx) == 0:
+        n = len(jobs)
+        return (np.zeros((n, horizon), np.int64), np.zeros(horizon, np.int64), np.zeros(n))
+    alloc, used, work = _greedy_jax(
+        jnp.asarray(j_idx, jnp.int32),
+        jnp.asarray(t_idx, jnp.int32),
+        jnp.asarray(k_val, jnp.int32),
+        jnp.asarray(gain, jnp.float32),
+        jnp.asarray(kmin),
+        jnp.asarray(lengths, jnp.float32),
+        int(capacity),
+        len(jobs),
+        int(horizon),
+    )
+    return np.asarray(alloc, np.int64), np.asarray(used, np.int64), np.asarray(work, np.float64)
+
+
+def solve(
+    jobs: list[Job],
+    ci: np.ndarray,
+    capacity: int,
+    horizon: int | None = None,
+    backend: str = "jax",
+    max_extensions: int = 8,
+    extension_slots: int = 24,
+) -> OracleResult:
+    """Run Algorithm 1; on infeasibility, extend deadlines of unfinished jobs
+    and retry (the paper's fix, §4.2 'Retaining Oracle decisions')."""
+    horizon = int(horizon or len(ci))
+    jobs = [dataclasses.replace(j) for j in jobs]
+    lengths = np.array([j.length for j in jobs])
+    extended = np.zeros(len(jobs), dtype=np.int64)
+    for attempt in range(max_extensions + 1):
+        alloc, used, work = _greedy(jobs, ci, capacity, horizon, lengths, backend)
+        unfinished = work < lengths - 1e-6
+        if not unfinished.any() or attempt == max_extensions:
+            break
+        for idx in np.nonzero(unfinished)[0]:
+            jobs[idx] = dataclasses.replace(jobs[idx], delay=jobs[idx].delay + extension_slots)
+            extended[idx] += extension_slots
+    feasible = bool((work >= lengths - 1e-6).all())
+    schedule = Schedule(alloc=alloc, jobs=jobs, feasible=feasible, extended=extended)
+    rho = _rho_curve(jobs, alloc)
+    return OracleResult(
+        schedule=schedule,
+        capacity_curve=used.astype(np.int64),
+        rho_curve=rho,
+        work_done=work,
+    )
+
+
+def _rho_curve(jobs: list[Job], alloc: np.ndarray) -> np.ndarray:
+    """rho_t = lowest marginal throughput among scheduled jobs at t (Table 2).
+    1.0 (= p(k_min), the most permissive threshold) when nothing runs."""
+    horizon = alloc.shape[1]
+    rho = np.ones(horizon)
+    for t in range(horizon):
+        ks = alloc[:, t]
+        marginals = [jobs[j].marginal(int(ks[j])) for j in np.nonzero(ks)[0]]
+        if marginals:
+            rho[t] = min(marginals)
+    return rho

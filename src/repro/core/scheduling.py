@@ -1,0 +1,126 @@
+"""CarbonFlex runtime scheduling — Algorithm 3 (psi).
+
+Given the provisioned capacity ``m_t`` and the learned marginal-throughput
+threshold ``rho``, allocate servers to queued/running jobs:
+
+- enumerate (job, scale) pairs with ``p_j(k) >= rho``;
+- sort by marginal throughput desc, remaining slack asc (line 6);
+- allocate incrementally until ``m_t`` is filled;
+- jobs are not scaled past ``k_min`` until every eligible job holds
+  ``k_min`` (starvation freedom) — this falls out of the sort because
+  ``p_j(k_min) = 1`` dominates every scaling marginal;
+- jobs whose slack is exhausted are *forced*: they are allocated ``k_min``
+  first, bypassing ``rho`` (run-to-completion after the permitted delay,
+  §6.1), mirroring how every baseline in the paper honours SLOs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .types import Job
+
+_EPS = 1e-9
+
+
+@dataclasses.dataclass
+class ActiveJob:
+    """Runtime view of a job inside the cluster."""
+
+    job: Job
+    remaining: float            # work left, in k_min-slots
+    slack_left: int             # waiting budget left (slots)
+    waited: int = 0             # slots spent queued/paused so far
+    started: bool = False
+
+    @property
+    def forced(self) -> bool:
+        return self.slack_left <= 0
+
+    @property
+    def done(self) -> bool:
+        return self.remaining <= _EPS
+
+
+def schedule(
+    active: list[ActiveJob],
+    m_t: int,
+    rho: float,
+    fill_spare: bool = False,
+) -> dict[int, int]:
+    """Algorithm 3.  Returns {job_id: k} for jobs to run this slot.
+
+    ``fill_spare``: when the rho-filtered pass leaves provisioned capacity
+    idle (the runtime backlog is smaller than the oracle's was in the
+    matched historical state), continue down the marginal-throughput list
+    rho-free.  The oracle never leaves provisioned capacity idle while
+    positive-marginal work exists, so this keeps the mimicry faithful; the
+    provisioning decision m_t (not rho) is what protects high-carbon slots.
+    """
+    alloc: dict[int, int] = {}
+    used = 0
+
+    # Forced jobs first (slack exhausted): base allocation, ignore rho.
+    forced = sorted((a for a in active if a.forced and not a.done),
+                    key=lambda a: a.slack_left)
+    for a in forced:
+        k = a.job.k_min
+        if used + k > m_t:
+            break
+        alloc[a.job.job_id] = k
+        used += k
+
+    # Candidate (job, scale) list (lines 2–5); spare-fill entries kept aside.
+    entries: list[tuple[float, int, int, int]] = []   # (p, slack, job_id, k)
+    spares: list[tuple[float, int, int, int]] = []
+    by_id = {a.job.job_id: a for a in active}
+    for a in active:
+        if a.done:
+            continue
+        for k in range(a.job.k_min, a.job.k_max + 1):
+            p = a.job.marginal(k)
+            if p <= 0:
+                continue
+            if p >= rho - _EPS:
+                entries.append((p, a.slack_left, a.job.job_id, k))
+            elif fill_spare:
+                spares.append((p, a.slack_left, a.job.job_id, k))
+    # Sort: marginal throughput desc, then remaining slack asc (line 6).
+    entries.sort(key=lambda e: (-e[0], e[1]))
+    spares.sort(key=lambda e: (-e[0], e[1]))
+
+    def fill(cands: list[tuple[float, int, int, int]], used: int) -> int:
+        for p, _, jid, k in cands:                     # lines 7–9
+            a = by_id[jid]
+            cur = alloc.get(jid, 0)
+            is_base = k == a.job.k_min
+            add = a.job.k_min if is_base else 1
+            if is_base and cur != 0:
+                continue
+            if not is_base and cur != k - 1:
+                continue
+            if used + add > m_t:
+                continue
+            alloc[jid] = k
+            used += add
+        return used
+
+    used = fill(entries, used)
+    if fill_spare and used < m_t:
+        used = fill(spares, used)
+    return alloc
+
+
+def apply_slot(active: list[ActiveJob], alloc: dict[int, int]) -> None:
+    """Advance one slot: progress allocated jobs, charge waiting to others."""
+    for a in active:
+        if a.done:
+            continue
+        k = alloc.get(a.job.job_id, 0)
+        if k > 0:
+            a.remaining -= a.job.throughput(k)
+            a.started = True
+        else:
+            a.slack_left -= 1
+            a.waited += 1

@@ -1,0 +1,197 @@
+"""CarbonFlex-Simulator: slot-level cluster engine (paper §5, §6).
+
+Discrete-time simulation of a cloud cluster running elastic batch jobs
+under a pluggable provisioning+scheduling policy.  Per slot:
+
+  1. admit arrivals into the active set;
+  2. ask the policy for ``(m_t, allocations)``;
+  3. enforce the capacity invariant (sum of allocations <= min(m_t, M));
+  4. advance job progress / waiting budgets;
+  5. account energy (Eq. 2–3) and carbon (Eq. 1);
+  6. record completions, waiting times and SLO violations.
+
+The engine runs past the nominal window until all admitted jobs finish
+(run-to-completion semantics shared by every policy in §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol
+
+import numpy as np
+
+from . import emissions
+from .carbon import CarbonService
+from .scheduling import ActiveJob, apply_slot
+from .types import ClusterConfig, Job, SimResult, SlotLog
+
+
+@dataclasses.dataclass
+class FaultModel:
+    """Cluster-level fault/straggler injection (DESIGN.md §10).
+
+    Each slot, every job independently suffers a *straggler* event with
+    probability ``straggler_rate`` (progress that slot scaled by
+    ``straggler_slowdown`` — a slow host in the allocation), or a *failure*
+    with probability ``failure_rate`` (the slot's progress is lost entirely:
+    the job restarts the slot from its last checkpoint).  Seeded and
+    deterministic.  CarbonFlex's Algorithm-2 violation feedback is the
+    compensating control loop — see tests/test_faults.py."""
+
+    straggler_rate: float = 0.0
+    straggler_slowdown: float = 0.5
+    failure_rate: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        self._rng = np.random.default_rng(self.seed)
+
+    def progress_factor(self, t: int, job_id: int) -> float:
+        u = self._rng.random()
+        if u < self.failure_rate:
+            return 0.0
+        if u < self.failure_rate + self.straggler_rate:
+            return self.straggler_slowdown
+        return 1.0
+
+
+class Policy(Protocol):
+    name: str
+
+    def on_window_start(self, ci: CarbonService, t0: int, horizon: int,
+                        jobs: list[Job], cluster: ClusterConfig) -> None: ...
+
+    def decide(self, t: int, active: list[ActiveJob], ci: CarbonService,
+               cluster: ClusterConfig) -> tuple[int, dict[int, int]]: ...
+
+    def on_completion(self, t: int, job: ActiveJob, violated: bool) -> None: ...
+
+
+def simulate(
+    jobs: list[Job],
+    ci: CarbonService,
+    cluster: ClusterConfig,
+    policy: Policy,
+    t0: int = 0,
+    horizon: int | None = None,
+    max_overrun: int = 24 * 21,
+    faults: FaultModel | None = None,
+) -> SimResult:
+    horizon = int(horizon if horizon is not None else len(ci) - t0)
+    jobs = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
+    policy.on_window_start(ci, t0, horizon, jobs, cluster)
+
+    active: list[ActiveJob] = []
+    pending = list(jobs)
+    n = len(jobs)
+    wait = np.zeros(n)
+    violations = np.zeros(n, dtype=bool)
+    completion = np.full(n, -1, dtype=np.int64)
+    id2row = {j.job_id: i for i, j in enumerate(jobs)}
+
+    logs: list[SlotLog] = []
+    total_energy = 0.0
+    total_carbon = 0.0
+    t = t0
+    t_end = t0 + horizon
+    while t < t_end + max_overrun:
+        while pending and pending[0].arrival <= t:
+            j = pending.pop(0)
+            active.append(ActiveJob(job=j, remaining=j.length, slack_left=j.delay))
+        if not active and not pending and t >= t_end:
+            break
+
+        m_t, alloc = policy.decide(t, active, ci, cluster)
+        m_t = int(min(m_t, cluster.capacity))
+        alloc = _enforce_capacity(alloc, active, m_t)
+
+        civ = ci.ci(t)
+        energy = 0.0
+        for a in active:
+            k = alloc.get(a.job.job_id, 0)
+            if k > 0:
+                # Fractional final slot (paper footnote 4): only the work
+                # actually needed is charged.
+                frac = min(1.0, a.remaining / max(a.job.throughput(k), 1e-9))
+                energy += emissions.slot_energy_kwh(a.job, k, cluster, frac)
+        carbon = emissions.slot_carbon_g(energy, civ)
+        total_energy += energy
+        total_carbon += carbon
+
+        if faults is None:
+            apply_slot(active, alloc)
+        else:
+            # degraded slots: scale each allocated job's progress; energy
+            # was already charged (a slow/failed host still burns power)
+            for a in active:
+                if a.done:
+                    continue
+                k = alloc.get(a.job.job_id, 0)
+                if k > 0:
+                    f = faults.progress_factor(t, a.job.job_id)
+                    a.remaining -= a.job.throughput(k) * f
+                    a.started = True
+                else:
+                    a.slack_left -= 1
+                    a.waited += 1
+
+        finished = [a for a in active if a.done]
+        for a in finished:
+            row = id2row[a.job.job_id]
+            completion[row] = t
+            wait[row] = a.waited
+            violations[row] = t > a.job.deadline
+            policy.on_completion(t, a, bool(violations[row]))
+        active = [a for a in active if not a.done]
+
+        used = sum(alloc.values())
+        logs.append(SlotLog(slot=t, ci=civ, provisioned=m_t, used=used,
+                            energy_kwh=energy, carbon_g=carbon,
+                            running=len(alloc), queued=len(active) - len(alloc)))
+        t += 1
+
+    return SimResult(
+        policy=policy.name,
+        carbon_g=total_carbon,
+        energy_kwh=total_energy,
+        slots=logs,
+        wait_slots=wait,
+        violations=violations,
+        completion=completion,
+        num_jobs=n,
+    )
+
+
+def _enforce_capacity(alloc: dict[int, int], active: list[ActiveJob], m_t: int) -> dict[int, int]:
+    """Capacity invariant: trim allocations (lowest marginal first) to m_t."""
+    by_id = {a.job.job_id: a for a in active}
+    alloc = {jid: int(k) for jid, k in alloc.items()
+             if jid in by_id and k > 0}
+    for jid in list(alloc):
+        a = by_id[jid]
+        alloc[jid] = int(np.clip(alloc[jid], a.job.k_min, a.job.k_max))
+    total = sum(alloc.values())
+    if total <= m_t:
+        return alloc
+    # Shed the least carbon-efficient increments first.
+    incs = []
+    for jid, k in alloc.items():
+        a = by_id[jid]
+        for kk in range(a.job.k_min + 1, k + 1):
+            incs.append((a.job.marginal(kk), jid, kk))
+    incs.sort()                      # lowest marginal first
+    for p, jid, kk in incs:
+        if total <= m_t:
+            break
+        if alloc.get(jid, 0) == kk:
+            alloc[jid] = kk - 1
+            total -= 1
+    # Still above capacity: drop whole base allocations, latest-slack first.
+    if total > m_t:
+        order = sorted(alloc, key=lambda jid: -by_id[jid].slack_left)
+        for jid in order:
+            if total <= m_t:
+                break
+            total -= alloc[jid]
+            del alloc[jid]
+    return alloc

@@ -1,0 +1,2 @@
+from .compression import make_compressor  # noqa: F401
+from .rescale import ElasticTrainer, RescalePlan  # noqa: F401

@@ -1,0 +1,152 @@
+"""Elastic training runtime: CarbonFlex-driven rescale + fault tolerance.
+
+This is the mechanism layer the paper delegates to Slurm (`scancel` ->
+checkpoint -> resubmit at a new scale, §5): the trainer runs a jitted
+train step on a mesh whose ``data`` extent equals the current allocation
+``k``; when the resource manager (CarbonFlexPolicy / MPC / any Policy)
+changes ``k``, the trainer checkpoints, rebuilds the mesh, restores the
+state under the new shardings and re-jits.  Faults are handled the same
+way: any step failure (or an injected fault) falls back to the last
+checkpoint.
+
+Straggler mitigation: the trainer tracks a rolling median step time; a
+step slower than ``straggler_factor`` x median marks the slot degraded —
+the driver reports it to the scheduler, which treats the job's throughput
+accordingly (and, on a real cluster, would swap the slow host out at the
+next rescale boundary — here the rescale path doubles as the swap).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+import jax
+
+from repro.launch.mesh import make_mesh
+from repro.models import LogicalRules, ModelConfig
+from repro.train import (CheckpointManager, OptimizerConfig, SyntheticLM,
+                         TrainState, init_state, make_train_step,
+                         state_shardings)
+
+
+@dataclasses.dataclass
+class RescalePlan:
+    """One elastic allocation interval."""
+
+    k: int                 # data-parallel degree (paper: servers for the job)
+    steps: int             # train steps to run at this scale
+
+
+class ElasticTrainer:
+    def __init__(self, cfg: ModelConfig, data: SyntheticLM,
+                 opt: OptimizerConfig, ckpt_dir: str,
+                 model_axis: int = 1, seed: int = 0,
+                 compression: Optional[Callable] = None,
+                 straggler_factor: float = 3.0):
+        self.cfg = cfg
+        self.data = data
+        self.opt = opt
+        self.model_axis = model_axis
+        self.ckpt = CheckpointManager(ckpt_dir)
+        self.compression = compression
+        self.straggler_factor = straggler_factor
+        self._key = jax.random.key(seed)
+        self._state: Optional[TrainState] = None
+        self._k = 0
+        self._step_fn = None
+        self._rules = None
+        self.step_times: list[float] = []
+        self.stragglers = 0
+        self.rescales = 0
+        self.recoveries = 0
+
+    # ----- mesh / scale management -----------------------------------------
+
+    def _build(self, k: int) -> None:
+        mesh = make_mesh((k, self.model_axis), ("data", "model"))
+        self._rules = LogicalRules(mesh)
+        self._step_fn = jax.jit(make_train_step(
+            self.cfg, self._rules, self.opt, compression=self.compression,
+            ce_chunk=128))
+        shardings = state_shardings(self.cfg, self._rules,
+                                    compression=self.compression is not None)
+        if self._state is None:
+            latest = self.ckpt.latest_step()
+            template = jax.eval_shape(
+                lambda: init_state(self.cfg, jax.random.key(0),
+                                   compression=self.compression is not None))
+            if latest is not None:
+                self._state = self.ckpt.restore(template, shardings=shardings)
+                self.recoveries += 1
+            else:
+                self._state = init_state(
+                    self.cfg, self._key,
+                    compression=self.compression is not None)
+        else:
+            # live rescale: checkpoint -> re-place under the new shardings
+            self.ckpt.save(int(self._state.step), self._state, blocking=True)
+            template = jax.eval_shape(lambda: self._state)
+            self._state = self.ckpt.restore(template, shardings=shardings)
+            self.rescales += 1
+        self._k = k
+
+    def set_scale(self, k: int) -> None:
+        if k != self._k:
+            self._build(k)
+
+    # ----- training ---------------------------------------------------------
+
+    def run(self, plan: list[RescalePlan], checkpoint_every: int = 50,
+            fault_at: Optional[int] = None) -> dict:
+        """Execute an elastic plan; ``fault_at``: inject a failure at that
+        global step (the trainer must recover from the last checkpoint)."""
+        losses = []
+        faulted = False
+        for phase in plan:
+            if phase.k <= 0:       # suspended (paper: job paused at high CI)
+                continue
+            self.set_scale(phase.k)
+            # a phase advances state.step by phase.steps — after a fault
+            # rollback the re-done steps are NOT double-counted
+            target = int(self._state.step) + phase.steps
+            while int(self._state.step) < target:
+                step_no = int(self._state.step)
+                batch = {"tokens": self.data.batch_at(step_no)}
+                t0 = time.time()
+                try:
+                    if fault_at is not None and step_no == fault_at and not faulted:
+                        faulted = True
+                        raise RuntimeError("injected node failure")
+                    self._state, metrics = self._step_fn(self._state, batch)
+                    loss = float(metrics["loss"])
+                except RuntimeError:
+                    # fault: restore last checkpoint and continue
+                    template = jax.eval_shape(lambda: self._state)
+                    shardings = state_shardings(
+                        self.cfg, self._rules,
+                        compression=self.compression is not None)
+                    if self.ckpt.latest_step() is not None:
+                        self._state = self.ckpt.restore(template,
+                                                        shardings=shardings)
+                    self.recoveries += 1
+                    continue
+                dt = time.time() - t0
+                self.step_times.append(dt)
+                med = float(np.median(self.step_times[-20:]))
+                if len(self.step_times) > 5 and dt > self.straggler_factor * med:
+                    self.stragglers += 1
+                losses.append(loss)
+                if step_no and step_no % checkpoint_every == 0:
+                    self.ckpt.save(step_no, self._state)
+        self.ckpt.wait()
+        self.ckpt.save(int(self._state.step), self._state, blocking=True)
+        return {
+            "losses": losses,
+            "final_step": int(self._state.step),
+            "rescales": self.rescales,
+            "recoveries": self.recoveries,
+            "stragglers": self.stragglers,
+        }

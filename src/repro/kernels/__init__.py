@@ -1,0 +1,1 @@
+from . import flash_attention, knn, ops, ref, score  # noqa: F401

@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: tiled squared-Euclidean distances for the KNN
+knowledge-base lookup (paper §4.3 / Algorithm 2).
+
+The case base is (N, D) with N up to a few thousand z-scored Table-2
+states; the query is one state vector.  The kernel tiles the case base
+over N into VMEM blocks, computes the fused (x - q)^2 row reduction per
+block (one pass, no (N, D) temporary in HBM), and the jit wrapper applies
+``lax.top_k`` to the resulting (N,) distance vector — top-k over a few
+thousand scalars is not worth a custom kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 256
+# pad feature dim to the lane width so the VMEM tile is hardware-aligned
+LANE = 128
+
+
+def _dist_kernel(cases_ref, query_ref, out_ref):
+    x = cases_ref[...].astype(jnp.float32)          # (BLOCK_N, Dp)
+    q = query_ref[...].astype(jnp.float32)          # (1, Dp)
+    diff = x - q
+    out_ref[...] = jnp.sum(diff * diff, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def squared_distances(cases: jax.Array, query: jax.Array,
+                      interpret: bool = True) -> jax.Array:
+    """(N, D), (D,) -> (N,) squared Euclidean distances."""
+    n, d = cases.shape
+    dp = ((d + LANE - 1) // LANE) * LANE
+    np_ = ((n + BLOCK_N - 1) // BLOCK_N) * BLOCK_N
+    cases_p = jnp.zeros((np_, dp), cases.dtype).at[:n, :d].set(cases)
+    query_p = jnp.zeros((1, dp), query.dtype).at[0, :d].set(query)
+    out = pl.pallas_call(
+        _dist_kernel,
+        grid=(np_ // BLOCK_N,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_N, dp), lambda i: (i, 0)),
+            pl.BlockSpec((1, dp), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_N, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((np_, 1), jnp.float32),
+        interpret=interpret,
+    )(cases_p, query_p)
+    return out[:n, 0]
+
+
+def knn_topk(cases: jax.Array, query: jax.Array, k: int,
+             interpret: bool = True):
+    """Top-k nearest cases: returns (distances, indices) ascending."""
+    d2 = squared_distances(cases, query, interpret=interpret)
+    neg, idx = jax.lax.top_k(-d2, k)
+    return jnp.sqrt(jnp.maximum(-neg, 0.0)), idx

@@ -1,0 +1,37 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret=True`` everywhere by default: this container is CPU-only, so
+the kernels execute through the Pallas interpreter for correctness; on a
+real TPU deployment set ``REPRO_PALLAS_INTERPRET=0`` (or pass
+``interpret=False``) to compile to Mosaic.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from . import flash_attention as _fa
+from . import knn as _knn
+from . import score as _score
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def knn_topk(cases: jax.Array, query: jax.Array, k: int,
+             interpret: bool | None = None):
+    return _knn.knn_topk(cases, query, k,
+                         interpret=_INTERPRET if interpret is None else interpret)
+
+
+def score_matrix(marginals, ci, t_start, t_end, interpret: bool | None = None):
+    return _score.score_matrix(
+        marginals, ci, t_start, t_end,
+        interpret=_INTERPRET if interpret is None else interpret)
+
+
+def flash_attention(q, k, v, causal_offset: int = 0,
+                    interpret: bool | None = None, **kw):
+    return _fa.gqa_flash(q, k, v, causal_offset=causal_offset,
+                         interpret=_INTERPRET if interpret is None else interpret,
+                         **kw)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def knn_topk_ref(cases: jax.Array, query: jax.Array, k: int):
+    """Squared-Euclidean top-k: returns (distances, indices), ascending."""
+    d2 = jnp.sum((cases - query[None, :]) ** 2, axis=1)
+    neg, idx = jax.lax.top_k(-d2, k)
+    return jnp.sqrt(jnp.maximum(-neg, 0.0)), idx
+
+
+def score_matrix_ref(marginals: jax.Array, ci: jax.Array,
+                     t_start: jax.Array, t_end: jax.Array):
+    """Oracle score construction (Algorithm 1 lines 2–5), fused + masked.
+
+    marginals: (J,) marginal throughput p_j(k) of each (job, scale) entry;
+    ci: (T,) carbon intensities; t_start/t_end: (J,) inclusive/exclusive
+    window bounds per entry.  Returns (J, T) scores, 0 outside windows.
+    """
+    t = jnp.arange(ci.shape[0])
+    mask = (t[None, :] >= t_start[:, None]) & (t[None, :] < t_end[:, None])
+    scores = marginals[:, None] / jnp.maximum(ci[None, :], 1e-9)
+    return jnp.where(mask, scores, 0.0)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal_offset: int = 0):
+    """Causal GQA attention oracle.  q: (B,Sq,H,D); k/v: (B,Sk,KV,D)."""
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    qg = q.reshape(b, sq, hkv, hq // hkv, d).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32)) / np.sqrt(d)
+    qpos = causal_offset + jnp.arange(sq)
+    kpos = jnp.arange(k.shape[1])
+    mask = qpos[:, None] >= kpos[None, :]
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, d).astype(q.dtype)

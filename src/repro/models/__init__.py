@@ -1,0 +1,4 @@
+from .api import (FAMILIES, abstract_params, forward, init_params,  # noqa: F401
+                  module_for, param_count, param_shardings)
+from .common import (DEFAULT_RULES, LogicalRules, ModelConfig, SHAPES,  # noqa: F401
+                     ShapeConfig, constrain)

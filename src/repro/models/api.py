@@ -1,0 +1,103 @@
+"""Family-generic model API: init / abstract params / forward dispatch.
+
+Every family module exposes ``param_shapes(cfg)``, ``param_specs(cfg)``
+and ``forward(params, tokens, cfg, rules, **kw)``; this module provides
+the generic constructors over those descriptions:
+
+- ``init_params``       — real initialisation (smoke tests, examples);
+- ``abstract_params``   — ShapeDtypeStruct tree with shardings (dry-run,
+                          no device allocation);
+- ``param_shardings``   — NamedSharding tree (jit in_shardings).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import rwkv6, transformer, zamba2
+from .common import LogicalRules, ModelConfig, dense_init
+
+FAMILIES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "audio": transformer,
+    "ssm": rwkv6,
+    "hybrid": zamba2,
+}
+
+
+def module_for(cfg: ModelConfig):
+    return FAMILIES[cfg.family]
+
+
+def _walk_flat(node, prefix=()):
+    for name, v in node.items():
+        if isinstance(v, dict):
+            yield from _walk_flat(v, prefix + (name,))
+        else:
+            yield prefix + (name,), v
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Any:
+    shapes = module_for(cfg).param_shapes(cfg)
+    flat = dict(_walk_flat(shapes))
+    keys = jax.random.split(key, len(flat))
+    out: dict = {}
+    for (path, shape), k in zip(sorted(flat.items()), keys):
+        node = out
+        for part in path[:-1]:
+            node = node.setdefault(part, {})
+        leaf = path[-1]
+        if leaf.startswith("ln") or leaf in ("d_skip",):
+            node[leaf] = jnp.ones(shape, cfg.param_dtype)
+        elif leaf in ("mix", "mix_c"):
+            node[leaf] = jnp.full(shape, 0.5, cfg.param_dtype)
+        elif leaf in ("w0",):
+            node[leaf] = jnp.full(shape, -1.0, cfg.param_dtype)
+        elif leaf in ("a_log",):
+            node[leaf] = jnp.zeros(shape, cfg.param_dtype)
+        elif leaf in ("dt_bias",):
+            node[leaf] = jnp.full(shape, -1.0, cfg.param_dtype)
+        else:
+            node[leaf] = dense_init(k, shape, cfg.param_dtype,
+                                    in_axis=max(len(shape) - 2, 0))
+    return out
+
+
+def abstract_params(cfg: ModelConfig, rules: LogicalRules) -> Any:
+    mod = module_for(cfg)
+    shapes, specs = mod.param_shapes(cfg), mod.param_specs(cfg)
+
+    def walk(sh, sp):
+        if isinstance(sh, dict):
+            return {k: walk(sh[k], sp[k]) for k in sh}
+        return jax.ShapeDtypeStruct(sh, cfg.param_dtype,
+                                    sharding=rules.sharding(*sp, dims=sh))
+
+    return walk(shapes, specs)
+
+
+def param_shardings(cfg: ModelConfig, rules: LogicalRules) -> Any:
+    mod = module_for(cfg)
+    shapes, specs = mod.param_shapes(cfg), mod.param_specs(cfg)
+
+    def walk(sh, sp):
+        if isinstance(sh, dict):
+            return {k: walk(sh[k], sp[k]) for k in sh}
+        return rules.sharding(*sp, dims=sh)
+
+    return walk(shapes, specs)
+
+
+def forward(params, tokens, cfg: ModelConfig, rules: LogicalRules, **kw):
+    return module_for(cfg).forward(params, tokens, cfg, rules, **kw)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    shapes = module_for(cfg).param_shapes(cfg)
+    import numpy as np
+
+    return int(sum(np.prod(s) for _, s in _walk_flat(shapes)))

@@ -1,0 +1,318 @@
+"""Shared model substrate: configs, logical sharding, norms, attention, MLP.
+
+Sharding follows the MaxText-style logical-axis-rules pattern: every tensor
+dimension carries a *logical* name; ``LogicalRules`` maps logical names to
+mesh axes.  The production mesh is ``("pod", "data", "model")`` (or
+``("data", "model")`` single-pod):
+
+- ``pod``    — pure data parallelism across pods (gradient all-reduce
+               crosses the inter-pod links; this is the term CarbonFlex's
+               elastic-scaling profiles model);
+- ``data``   — data parallelism + FSDP (weights' contracting dims sharded);
+- ``model``  — tensor parallelism (heads / d_ff / experts / vocab).
+
+Head sharding degrades gracefully: if a head count does not divide the
+``model`` axis (e.g. minicpm-2b's 36 heads on a 16-way axis), the rule
+falls back to replication for that dimension and TP applies to the MLP
+only (recorded in DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# --------------------------------------------------------------------------
+# configuration
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One assigned architecture (see repro/configs/)."""
+
+    name: str
+    family: str                    # "dense" | "moe" | "ssm" | "hybrid" | "vlm" | "audio"
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // num_heads
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    # SSM / hybrid
+    ssm_state: int = 0
+    shared_attn_every: int = 6     # zamba2: shared attention block period
+    # frontend stubs
+    prefix_len: int = 0            # vlm/audio: precomputed embedding prefix
+    # numerics
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    moment_dtype: Any = jnp.float32
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    use_bias: bool = False
+    tie_embeddings: bool = False
+    # training
+    remat: str = "collectives"     # "full" | "dots" | "collectives" | "none"
+    lr_schedule: str = "cosine"    # minicpm uses "wsd"
+    # sequence parallelism: shard the residual stream's seq dim over
+    # `model` between blocks (Megatron-SP style; evaluated in §Perf)
+    sequence_parallel: bool = False
+    # attention implementation: "xla" chunked scan | "pallas" flash kernel
+    attention_backend: str = "xla"
+    attention_chunk: int = 1024
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for roofline MODEL_FLOPS)."""
+        d, h = self.d_model, self.resolved_head_dim
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        if self.family == "ssm":                      # rwkv6-style
+            att = self.num_layers * (d * d * 4 + d * d // 2)
+            ff = self.num_layers * 2 * d * self.d_ff
+            return emb + att + ff
+        attn = self.num_layers * (
+            d * self.num_heads * h + 2 * d * self.num_kv_heads * h
+            + self.num_heads * h * d
+        )
+        if self.num_experts:
+            ff = self.num_layers * (
+                3 * d * self.d_ff * self.num_experts + d * self.num_experts
+            )
+        else:
+            ff = self.num_layers * 3 * d * self.d_ff
+        if self.family == "hybrid":                   # mamba2 blocks dominate
+            ff = self.num_layers * 3 * d * self.d_ff
+            attn = attn // max(self.num_layers // self.shared_attn_every, 1)
+        return emb + attn + ff
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE: only routed experts)."""
+        if not self.num_experts:
+            return self.param_count()
+        d = self.d_model
+        dense = self.param_count() - self.num_layers * 3 * d * self.d_ff * self.num_experts
+        return dense + self.num_layers * 3 * d * self.d_ff * self.experts_per_token
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One input-shape cell of the assigned grid."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+# --------------------------------------------------------------------------
+# logical sharding rules
+
+
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,          # activation d_model
+    "fsdp": "data",         # weight contracting / largest dim (ZeRO-3 style)
+    "vocab": "model",
+    "heads": "model",
+    "kv": None,             # GQA kv heads usually < model axis -> replicate
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "layers": None,
+    "seq_sp": "model",      # sequence-parallel residual stream (opt-in)
+    "cache_seq": "model",   # decode: sequence-sharded KV cache
+    "cache_batch": ("pod", "data"),
+    "ssm_state": None,
+}
+
+
+class LogicalRules:
+    """Maps logical axis names -> mesh axes, validated against the mesh."""
+
+    def __init__(self, mesh: Mesh, overrides: dict[str, Any] | None = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if overrides:
+            self.rules.update(overrides)
+
+    def _mesh_size(self, axes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        size = 1
+        for a in axes:
+            size *= self.mesh.shape.get(a, 1)
+        return size
+
+    def spec(self, *logical: Optional[str], dims: Sequence[int] | None = None) -> P:
+        """PartitionSpec for the given logical dims; falls back to
+        replication when a dim size does not divide the mesh extent."""
+        out = []
+        for i, name in enumerate(logical):
+            if name is None:
+                out.append(None)
+                continue
+            axes = self.rules.get(name)
+            axes_t = (axes,) if isinstance(axes, str) else axes
+            if axes_t is None:
+                out.append(None)
+                continue
+            # keep only axes that exist in the mesh
+            axes_t = tuple(a for a in axes_t if a in self.mesh.shape)
+            if not axes_t:
+                out.append(None)
+                continue
+            if dims is not None and dims[i] % self._mesh_size(axes_t) != 0:
+                out.append(None)      # graceful fallback (e.g. 36 heads on 16)
+                continue
+            out.append(axes_t[0] if len(axes_t) == 1 else axes_t)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def sharding(self, *logical, dims=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical, dims=dims))
+
+
+def constrain(x: jax.Array, rules: LogicalRules, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint via logical names (size-aware fallback)."""
+    return jax.lax.with_sharding_constraint(
+        x, rules.sharding(*logical, dims=x.shape)
+    )
+
+
+# --------------------------------------------------------------------------
+# initializers / spec helpers
+
+
+def dense_init(key, shape, dtype, in_axis=0):
+    fan_in = max(int(np.prod([shape[i] for i in range(len(shape))
+                              if i == in_axis])), 1)
+    return (jax.random.normal(key, shape) / np.sqrt(fan_in)).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# building blocks (pure functions over param dicts)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding; x: (..., seq, heads, head_dim)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def _attn_weights_chunk(q, k, mask, scale):
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    return jnp.where(mask, s, -1e30)
+
+
+def chunked_attention(
+    q: jax.Array,          # (B, Sq, H, D)
+    k: jax.Array,          # (B, Sk, KV, D)
+    v: jax.Array,          # (B, Sk, KV, D)
+    causal_offset: int,
+    chunk: int,
+) -> jax.Array:
+    """Memory-efficient causal attention: lax.scan over KV chunks with an
+    online-softmax running (m, l, o) — the XLA analogue of flash attention,
+    so 32k-token prefill compiles within HBM.  GQA: q heads grouped over kv
+    heads.  ``causal_offset``: absolute position of q[0] minus k[0] (for
+    decode q is at the end of the cache)."""
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    group = hq // hkv
+    qg = q.reshape(b, sq, hkv, group, d)
+    scale = 1.0 / np.sqrt(d)
+    nchunk = int(np.ceil(sk / chunk))
+    pad = nchunk * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nchunk, chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nchunk, chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+    q_pos = causal_offset + jnp.arange(sq)
+
+    def body(carry, inputs):
+        m, l, o = carry
+        idx, kb, vb = inputs
+        k_pos = idx * chunk + jnp.arange(chunk)
+        mask = (q_pos[:, None] >= k_pos[None, :]) & (k_pos[None, :] < sk)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                       kb.astype(jnp.float32)) * scale
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        o_new = o * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32))
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((b, hkv, group, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, sq), jnp.float32)
+    o0 = jnp.zeros((b, hkv, group, sq, d), jnp.float32)
+    idxs = jnp.arange(nchunk)
+    (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0), (idxs, kc, vc))
+    out = o / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, d)
+    return out.astype(q.dtype)
+
+
+def attention(q, k, v, causal_offset, cfg: ModelConfig):
+    if cfg.attention_backend == "pallas":
+        from repro.kernels import flash_attention as fa
+
+        return fa.gqa_flash(q, k, v, causal_offset=causal_offset)
+    return chunked_attention(q, k, v, causal_offset, cfg.attention_chunk)
+
+
+def swiglu(x, w_gate, w_up, w_down, rules: LogicalRules):
+    h = jnp.einsum("bsd,df->bsf", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, w_up.astype(x.dtype))
+    h = constrain(jax.nn.silu(h) * u, rules, "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, w_down.astype(x.dtype))

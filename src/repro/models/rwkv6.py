@@ -1,0 +1,196 @@
+"""RWKV6 "Finch" (attention-free, data-dependent decay) — arXiv:2404.05892.
+
+Faithful-in-shape implementation: token-shift mixing, per-channel
+data-dependent decay ``w = exp(-exp(w0 + lora(x)))``, current-token bonus
+``u``, per-head matrix-valued state, squared-ReLU channel mix.  The time
+mix runs on the shared chunked linear-recurrence engine (ssm.py), so 32k
+prefill and 500k decode are O(chunk)/O(1) in memory.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from .common import LogicalRules, ModelConfig, constrain, dense_init, rms_norm
+from .ssm import chunked_linear_attention, recurrence_step
+
+LORA_RANK = 64
+HEAD_DIM = 64
+
+
+def num_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // HEAD_DIM
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    L, d, f = cfg.num_layers, cfg.d_model, cfg.d_ff
+    H, hd = num_heads(cfg), HEAD_DIM
+    return {
+        "embed": (cfg.vocab_size, d),
+        "layers": {
+            "ln1": (L, d), "ln2": (L, d),
+            "mix": (L, 5, d),                      # token-shift mus: r,k,v,w,g
+            "wr": (L, d, H, hd), "wk": (L, d, H, hd), "wv": (L, d, H, hd),
+            "wg": (L, d, H, hd), "wo": (L, H, hd, d),
+            "w0": (L, d), "w1": (L, d, LORA_RANK), "w2": (L, LORA_RANK, d),
+            "u": (L, H, hd),
+            "mix_c": (L, 2, d),                    # channel-mix mus: k,r
+            "ck": (L, d, f), "cv": (L, f, d), "cr": (L, d, d),
+        },
+        "ln_f": (d,),
+        "lm_head": (d, cfg.vocab_size),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    return {
+        "embed": ("vocab", "fsdp"),
+        "layers": {
+            "ln1": ("layers", "fsdp"), "ln2": ("layers", "fsdp"),
+            "mix": ("layers", None, "fsdp"),
+            "wr": ("layers", "fsdp", "heads", "head_dim"),
+            "wk": ("layers", "fsdp", "heads", "head_dim"),
+            "wv": ("layers", "fsdp", "heads", "head_dim"),
+            "wg": ("layers", "fsdp", "heads", "head_dim"),
+            "wo": ("layers", "heads", "head_dim", "fsdp"),
+            "w0": ("layers", "fsdp"),
+            "w1": ("layers", "fsdp", None),
+            "w2": ("layers", None, "fsdp"),
+            "u": ("layers", "heads", "head_dim"),
+            "mix_c": ("layers", None, "fsdp"),
+            "ck": ("layers", "fsdp", "mlp"),
+            "cv": ("layers", "mlp", "fsdp"),
+            "cr": ("layers", "fsdp", None),
+        },
+        "ln_f": ("fsdp",),
+        "lm_head": ("fsdp", "vocab"),
+    }
+
+
+def _shift(x: jax.Array, prev: jax.Array | None = None) -> jax.Array:
+    """Token shift: x_{t-1} (zeros / carried ``prev`` at t=0)."""
+    first = prev[:, None] if prev is not None else jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def time_mix(x, lp, cfg: ModelConfig, rules: LogicalRules,
+             state=None, prev_tok=None, return_state=False):
+    b, s, d = x.shape
+    H, hd = num_heads(cfg), HEAD_DIM
+    xx = _shift(x, prev_tok)
+    def mixed(i):
+        mu = lp["mix"][i].astype(x.dtype)
+        return x + (xx - x) * mu
+    r = jnp.einsum("bsd,dhk->bshk", mixed(0), lp["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", mixed(1), lp["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", mixed(2), lp["wv"].astype(x.dtype))
+    g = jnp.einsum("bsd,dhk->bshk", mixed(4), lp["wg"].astype(x.dtype))
+    # data-dependent per-channel decay (kept in log space, <= 0)
+    lora = jnp.einsum("bsr,rd->bsd", jnp.tanh(
+        jnp.einsum("bsd,dr->bsr", mixed(3), lp["w1"].astype(x.dtype))
+    ), lp["w2"].astype(x.dtype))
+    log_w = -jnp.exp(
+        (lp["w0"].astype(jnp.float32)[None, None] + lora.astype(jnp.float32))
+        .clip(-8.0, 4.0)
+    ).reshape(b, s, H, hd)
+    r = constrain(r, rules, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, rules, "batch", "seq", "heads", "head_dim")
+    if return_state or state is not None:
+        y, new_state = chunked_linear_attention(
+            r, k, v, log_w, u=lp["u"], chunk=cfg.attention_chunk // 8 or 128,
+            initial_state=state, return_state=True)
+    else:
+        y = chunked_linear_attention(r, k, v, log_w, u=lp["u"],
+                                     chunk=cfg.attention_chunk // 8 or 128)
+        new_state = None
+    y = y * jax.nn.silu(g)
+    out = jnp.einsum("bshk,hkd->bsd", y, lp["wo"].astype(x.dtype))
+    if return_state:
+        return out, new_state
+    return out
+
+
+def channel_mix(x, lp, cfg: ModelConfig, prev_tok=None):
+    xx = _shift(x, prev_tok)
+    mu_k = lp["mix_c"][0].astype(x.dtype)
+    mu_r = lp["mix_c"][1].astype(x.dtype)
+    xk = x + (xx - x) * mu_k
+    xr = x + (xx - x) * mu_r
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, lp["ck"].astype(x.dtype))))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, lp["cr"].astype(x.dtype)))
+    return rr * jnp.einsum("bsf,fd->bsd", kk, lp["cv"].astype(x.dtype))
+
+
+def forward(params, tokens, cfg: ModelConfig, rules: LogicalRules,
+            return_hidden: bool = False, **_):
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    x = constrain(x, rules, "batch", "seq", "embed")
+
+    def body(carry, lp):
+        h = rms_norm(carry, lp["ln1"], cfg.norm_eps)
+        tm = checkpoint_name(time_mix(h, lp, cfg, rules), "attn_out")
+        carry = carry + constrain(tm, rules, "batch", "seq", "embed")
+        h2 = rms_norm(carry, lp["ln2"], cfg.norm_eps)
+        cm = checkpoint_name(channel_mix(h2, lp, cfg), "mlp_out")
+        carry = carry + constrain(cm, rules, "batch", "seq", "embed")
+        return carry, None
+
+    if cfg.remat == "none":
+        step = body
+    elif cfg.remat == "collectives":
+        # save the post-TP-all-reduce block outputs so the backward never
+        # re-executes the forward collectives (EXPERIMENTS.md §Perf ssm-1)
+        step = jax.checkpoint(body, policy=jax.checkpoint_policies
+                              .save_only_these_names("attn_out", "mlp_out"))
+    else:
+        step = jax.checkpoint(body)
+    x, _ = jax.lax.scan(step, x, params["layers"])
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    if return_hidden:
+        return x, params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return constrain(logits, rules, "batch", "seq", "vocab")
+
+
+def decode_step(params, token, cache, cfg: ModelConfig, rules: LogicalRules):
+    """O(1) decode: cache = {"state": (L,B,H,hd,hd) f32,
+    "tok1": (L,B,d), "tok2": (L,B,d)} (token-shift carries per block)."""
+    x = params["embed"].astype(cfg.compute_dtype)[token][:, None]   # (B,1,d)
+
+    def body(carry, inputs):
+        x = carry
+        lp, state, t1, t2 = inputs
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        y, new_state = time_mix(h, lp, cfg, rules, state=state,
+                                prev_tok=t1, return_state=True)
+        x = x + y
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + channel_mix(h2, lp, cfg, prev_tok=t2)
+        return x, (new_state, h[:, 0], h2[:, 0])
+
+    x, (states, t1s, t2s) = jax.lax.scan(
+        body, x, (params["layers"], cache["state"], cache["tok1"], cache["tok2"]))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return logits[:, 0], {"state": states, "tok1": t1s, "tok2": t2s}
+
+
+def init_cache(cfg: ModelConfig, batch: int) -> dict:
+    H, hd = num_heads(cfg), HEAD_DIM
+    L, d = cfg.num_layers, cfg.d_model
+    return {
+        "state": jnp.zeros((L, batch, H, hd, hd), jnp.float32),
+        "tok1": jnp.zeros((L, batch, d), cfg.compute_dtype),
+        "tok2": jnp.zeros((L, batch, d), cfg.compute_dtype),
+    }
+
+
+def cache_specs(cfg: ModelConfig) -> dict:
+    return {
+        "state": ("layers", "cache_batch", "heads", None, None),
+        "tok1": ("layers", "cache_batch", "embed"),
+        "tok2": ("layers", "cache_batch", "embed"),
+    }

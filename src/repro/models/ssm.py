@@ -1,0 +1,137 @@
+"""Chunked linear-recurrence engine shared by RWKV6 (Finch) and Mamba2 (SSD).
+
+Both models are linear-attention recurrences over a per-head state
+``S in R^{dk x dv}``:
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (RWKV6: w_t per-channel;
+                                                  Mamba2/SSD: w_t scalar)
+    y_t = q_t S_*  (+ current-token term)
+
+A naive ``lax.scan`` over time keeps one carry per step for the backward
+pass — O(S) states — which blows HBM at 32k context.  The chunked parallel
+form (the SSD trick, adapted to TPU) processes the sequence in chunks of
+``chunk`` tokens: within a chunk everything is dense matmuls (MXU-friendly,
+mask + cumulative log-decay), and only one state per chunk is carried, so
+the backward saves S/chunk states.
+
+Decay products are kept in log space for stability; per-chunk the products
+span at most ``chunk`` steps so fp32 suffices.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_linear_attention(
+    q: jax.Array,            # (B, S, H, dk)
+    k: jax.Array,            # (B, S, H, dk)
+    v: jax.Array,            # (B, S, H, dv)
+    log_w: jax.Array,        # (B, S, H, dk) per-channel or (B, S, H, 1) scalar log-decay, <= 0
+    u: jax.Array | None = None,   # (H, dk) RWKV6 current-token bonus; None -> SSD style
+    chunk: int = 128,
+    initial_state: jax.Array | None = None,   # (B, H, dk, dv)
+    return_state: bool = False,
+):
+    """Returns y (B, S, H, dv) [and final state].
+
+    Current-token term: with ``u`` (RWKV6), y_t += (q_t * u * k_t) v_t and
+    the state update applies decay *before* adding k_t v_t; without ``u``
+    (Mamba2/SSD), the j = t term enters through the decay chain with weight
+    exp(0) = 1.
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    nchunk = int(np.ceil(s / chunk))
+    pad = nchunk * chunk - s
+    if pad:
+        zq = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q = jnp.pad(q, zq)
+        k = jnp.pad(k, zq)
+        v = jnp.pad(v, zq)
+        log_w = jnp.pad(log_w, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    def to_chunks(x):
+        return x.reshape(b, nchunk, chunk, h, x.shape[-1]).transpose(1, 0, 2, 3, 4)
+
+    qc, kc, vc, wc = map(to_chunks, (q, k, v, log_w))
+
+    def body(state, inputs):
+        qb, kb, vb, wb = (t.astype(jnp.float32) for t in inputs)
+        # cumulative log decay within the chunk: cum[t] = sum_{j<=t} logw_j
+        cum = jnp.cumsum(wb, axis=1)                       # (B, c, H, dk)
+        cum_prev = cum - wb                                # sum_{j<t}
+        if u is None:
+            # SSD: q_t attends j<=t with decay exp(cum_t - cum_j)
+            q_eff = qb * jnp.exp(cum)
+            k_eff = kb * jnp.exp(-cum)
+            mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+            att = jnp.einsum("bthd,bjhd->bhtj", q_eff, k_eff)
+            att = jnp.where(mask[None, None], att, 0.0)
+            y = jnp.einsum("bhtj,bjhd->bthd", att, vb)
+            y = y + jnp.einsum("bthd,bhdv->bthv", q_eff, state)
+        else:
+            # RWKV6: j<t via decay chain w/ cum_prev; j=t via the u bonus
+            q_eff = qb * jnp.exp(cum_prev)
+            k_eff = kb * jnp.exp(-cum)
+            mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+            att = jnp.einsum("bthd,bjhd->bhtj", q_eff, k_eff)
+            att = jnp.where(mask[None, None], att, 0.0)
+            y = jnp.einsum("bhtj,bjhd->bthd", att, vb)
+            y = y + jnp.einsum("bthd,bhdv->bthv", q_eff, state)
+            y = y + jnp.einsum("bthd,bthv->bthv",
+                               qb * u.astype(jnp.float32)[None, None] * kb,
+                               vb)
+        # state to end of chunk
+        total = cum[:, -1]                                  # (B, H, dk)
+        carry_k = kb * jnp.exp(total[:, None] - cum)        # decay from j to end
+        new_state = state * jnp.exp(total)[..., None] + jnp.einsum(
+            "bthd,bthv->bhdv", carry_k, vb)
+        return new_state, y
+
+    state0 = (initial_state.astype(jnp.float32) if initial_state is not None
+              else jnp.zeros((b, h, dk, dv), jnp.float32))
+    state, ys = jax.lax.scan(body, state0, (qc, kc, vc, wc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nchunk * chunk, h, dv)[:, :s]
+    y = y.astype(v.dtype)
+    if return_state:
+        return y, state
+    return y
+
+
+def recurrence_step(
+    q: jax.Array,            # (B, H, dk)
+    k: jax.Array,
+    v: jax.Array,            # (B, H, dv)
+    log_w: jax.Array,        # (B, H, dk) or (B, H, 1)
+    state: jax.Array,        # (B, H, dk, dv)
+    u: jax.Array | None = None,
+):
+    """Single decode step (O(1) memory — this is why SSM archs run the
+    long_500k shape).  Returns (y, new_state)."""
+    q32, k32, v32 = (t.astype(jnp.float32) for t in (q, k, v))
+    w = jnp.exp(log_w.astype(jnp.float32))[..., None]        # (B,H,dk,1)
+    kv = k32[..., None] * v32[..., None, :]                  # (B,H,dk,dv)
+    if u is None:
+        new_state = state * w + kv
+        y = jnp.einsum("bhd,bhdv->bhv", q32, new_state)
+    else:
+        y = jnp.einsum("bhd,bhdv->bhv", q32,
+                       state + u.astype(jnp.float32)[None, ..., None] * kv)
+        new_state = state * w + kv
+    return y.astype(v.dtype), new_state
+
+
+def reference_scan(q, k, v, log_w, u=None, initial_state=None):
+    """Sequential oracle for tests: plain per-step recurrence."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    state = (initial_state.astype(jnp.float32) if initial_state is not None
+             else jnp.zeros((b, h, dk, dv), jnp.float32))
+    ys = []
+    for t in range(s):
+        y, state = recurrence_step(q[:, t], k[:, t], v[:, t], log_w[:, t], state, u=u)
+        ys.append(y)
+    return jnp.stack(ys, axis=1), state

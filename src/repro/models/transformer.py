@@ -1,0 +1,290 @@
+"""Dense / MoE decoder-only transformer (GQA + RoPE + SwiGLU).
+
+Covers the assigned LM archs: internvl2-2b (vision-prefix stub),
+command-r-plus-104b, minicpm-2b, llama3-8b, stablelm-1.6b, musicgen-large
+(EnCodec-token decoder), dbrx-132b and qwen3-moe (MoE via sort-based
+capacity dispatch with expert parallelism).
+
+Layers are stacked on a leading ``layers`` axis and executed with
+``lax.scan`` so the HLO contains one layer body regardless of depth; the
+body is rematerialised according to ``cfg.remat``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from jax.ad_checkpoint import checkpoint_name
+
+from .common import (LogicalRules, ModelConfig, attention, constrain,
+                     dense_init, rms_norm, rope, swiglu)
+
+PyTree = Any
+
+
+# --------------------------------------------------------------------------
+# parameter construction
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    """Logical axis names per parameter (mirrors init_params shapes)."""
+    L, d, hd = cfg.num_layers, cfg.d_model, cfg.resolved_head_dim
+    layers = {
+        "ln1": ("layers", "fsdp"),
+        "ln2": ("layers", "fsdp"),
+        "wq": ("layers", "fsdp", "heads", "head_dim"),
+        "wk": ("layers", "fsdp", "kv", "head_dim"),
+        "wv": ("layers", "fsdp", "kv", "head_dim"),
+        "wo": ("layers", "heads", "head_dim", "fsdp"),
+    }
+    if cfg.num_experts:
+        layers.update({
+            "router": ("layers", "fsdp", "experts"),
+            "w_gate": ("layers", "experts", "fsdp", "expert_mlp"),
+            "w_up": ("layers", "experts", "fsdp", "expert_mlp"),
+            "w_down": ("layers", "experts", "expert_mlp", "fsdp"),
+        })
+    else:
+        layers.update({
+            "w_gate": ("layers", "fsdp", "mlp"),
+            "w_up": ("layers", "fsdp", "mlp"),
+            "w_down": ("layers", "mlp", "fsdp"),
+        })
+    out = {"embed": ("vocab", "fsdp"), "layers": layers, "ln_f": ("fsdp",)}
+    if not cfg.tie_embeddings:
+        out["lm_head"] = ("fsdp", "vocab")
+    return out
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    L, d, hd = cfg.num_layers, cfg.d_model, cfg.resolved_head_dim
+    H, KV, f = cfg.num_heads, cfg.num_kv_heads, cfg.d_ff
+    layers = {
+        "ln1": (L, d), "ln2": (L, d),
+        "wq": (L, d, H, hd), "wk": (L, d, KV, hd), "wv": (L, d, KV, hd),
+        "wo": (L, H, hd, d),
+    }
+    if cfg.num_experts:
+        E = cfg.num_experts
+        layers.update({
+            "router": (L, d, E),
+            "w_gate": (L, E, d, f), "w_up": (L, E, d, f), "w_down": (L, E, f, d),
+        })
+    else:
+        layers.update({"w_gate": (L, d, f), "w_up": (L, d, f), "w_down": (L, f, d)})
+    out = {"embed": (cfg.vocab_size, d), "layers": layers, "ln_f": (d,)}
+    if not cfg.tie_embeddings:
+        out["lm_head"] = (d, cfg.vocab_size)
+    return out
+
+
+# --------------------------------------------------------------------------
+# MoE layer (sort-based capacity dispatch; experts sharded over `model`)
+#
+# Two implementations:
+#
+# - ``moe_block_global`` (the original baseline): a single global sort-based
+#   dispatch in pjit-auto mode.  The global argsort/scatter over tokens
+#   sharded on `data` forces the SPMD partitioner into replication —
+#   measured 3744 s of collective time per step on qwen3 x train_4k
+#   (EXPERIMENTS.md §Perf, iteration moe-1).
+#
+# - ``moe_block`` (shard_map local dispatch, the default): activations are
+#   already replicated over the `model` axis, so each (data, model) shard
+#   routes ITS OWN tokens to ITS OWN E/TP experts entirely locally
+#   (local top-k, local sort, local capacity), computes, scatters back a
+#   partial output, and one ``psum`` over `model` recombines each token's
+#   top-k expert outputs — the same collective shape as a dense
+#   tensor-parallel MLP.  Zero dispatch collectives.
+
+
+def _moe_local_dispatch(xt, router_w, w_gate, w_up, w_down, *, e_total,
+                        k_top, cap_frac, axis):
+    """Runs inside shard_map.  xt: (T_loc, d) local tokens; router_w: (d, E);
+    w_*: (E_loc, ...) local expert weights.  Returns the psum-combined
+    (T_loc, d) MoE output."""
+    t_loc, d = xt.shape
+    e_loc = w_gate.shape[0]
+    my0 = jax.lax.axis_index(axis) * e_loc
+    cap = max(int(np.ceil(t_loc * k_top / e_total * cap_frac)), 1)
+
+    logits = jnp.einsum("td,de->te", xt, router_w.astype(xt.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k_top)                 # (T_loc, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # keep only (token, expert) pairs routed to experts on THIS shard
+    flat_e = eidx.reshape(-1)
+    local = (flat_e >= my0) & (flat_e < my0 + e_loc)
+    rel_e = jnp.where(local, flat_e - my0, e_loc)            # e_loc = trash
+    order = jnp.argsort(rel_e, stable=True)                  # local sort only
+    sorted_e = rel_e[order]
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    ranks = jnp.arange(t_loc * k_top) - first
+    keep = (sorted_e < e_loc) & (ranks < cap)
+    slot = jnp.where(keep, sorted_e * cap + ranks, e_loc * cap)
+    src_tok = order // k_top
+
+    buf = jnp.zeros((e_loc * cap + 1, d), xt.dtype)
+    buf = buf.at[slot].set(xt[src_tok] * keep[:, None].astype(xt.dtype))
+    eb = buf[: e_loc * cap].reshape(e_loc, cap, d)
+
+    h = jnp.einsum("ecd,edf->ecf", eb, w_gate.astype(xt.dtype))
+    u = jnp.einsum("ecd,edf->ecf", eb, w_up.astype(xt.dtype))
+    yb = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, w_down.astype(xt.dtype))
+
+    ybuf = jnp.concatenate([yb.reshape(e_loc * cap, d),
+                            jnp.zeros((1, d), xt.dtype)])
+    contrib = ybuf[slot] * (gate.reshape(-1)[order] * keep)[:, None].astype(xt.dtype)
+    y = jnp.zeros((t_loc, d), xt.dtype).at[src_tok].add(contrib)
+    return jax.lax.psum(y, axis)      # combine top-k partials across shards
+
+
+def moe_block(x: jax.Array, lp: dict, cfg: ModelConfig,
+              rules: LogicalRules) -> jax.Array:
+    mesh = rules.mesh
+    if "model" not in mesh.shape or mesh.shape["model"] == 1 or \
+            cfg.num_experts % mesh.shape["model"] != 0:
+        return moe_block_global(x, lp, cfg, rules)
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    b, s, d = x.shape
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    xt = x.reshape(b * s, d)
+    espec = P("model")
+    fn = functools.partial(
+        _moe_local_dispatch, e_total=cfg.num_experts,
+        k_top=cfg.experts_per_token, cap_frac=cfg.capacity_factor,
+        axis="model")
+    y = shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(batch_axes, None), P(None, None), espec, espec, espec),
+        out_specs=P(batch_axes, None),
+        check_rep=False,
+    )(xt, lp["router"], lp["w_gate"], lp["w_up"], lp["w_down"])
+    return y.reshape(b, s, d)
+
+
+def moe_block_global(x: jax.Array, lp: dict, cfg: ModelConfig, rules: LogicalRules) -> jax.Array:
+    b, s, d = x.shape
+    T = b * s
+    E, K = cfg.num_experts, cfg.experts_per_token
+    C = int(np.ceil(T * K / E * cfg.capacity_factor))
+    xt = x.reshape(T, d)
+
+    logits = jnp.einsum("td,de->te", xt, lp["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate, eidx = jax.lax.top_k(probs, K)                     # (T, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = eidx.reshape(-1)                                # (T*K,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    ranks = jnp.arange(T * K) - first
+    keep = ranks < C                                         # token-drop beyond capacity
+    slot = jnp.where(keep, sorted_e * C + ranks, E * C)      # E*C = trash slot
+    src_tok = order // K
+
+    buf = jnp.zeros((E * C + 1, d), x.dtype)
+    buf = buf.at[slot].set(xt[src_tok] * keep[:, None].astype(x.dtype))
+    eb = buf[: E * C].reshape(E, C, d)
+    eb = constrain(eb, rules, "experts", None, "embed")
+
+    h = jnp.einsum("ecd,edf->ecf", eb, lp["w_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", eb, lp["w_up"].astype(x.dtype))
+    h = jax.nn.silu(h) * u
+    yb = jnp.einsum("ecf,efd->ecd", h, lp["w_down"].astype(x.dtype))
+    yb = constrain(yb, rules, "experts", None, "embed")
+
+    ybuf = jnp.concatenate([yb.reshape(E * C, d), jnp.zeros((1, d), x.dtype)])
+    contrib = ybuf[slot] * (gate.reshape(-1)[order] * keep)[:, None].astype(x.dtype)
+    y = jnp.zeros((T, d), x.dtype).at[src_tok].add(contrib)
+    return y.reshape(b, s, d)
+
+
+# --------------------------------------------------------------------------
+# decoder layer + full forward
+
+
+def decoder_layer(x, lp, cfg: ModelConfig, rules: LogicalRules,
+                  positions, kv_override=None):
+    """One decoder layer.  Returns (out, (k, v)) — the fresh K/V are used by
+    the prefill path to build a cache."""
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"].astype(h.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"].astype(h.dtype))
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, rules, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, rules, "batch", "seq", "kv", "head_dim")
+    if kv_override is not None:
+        k_all, v_all = kv_override
+    else:
+        k_all, v_all = k, v
+    o = attention(q, k_all, v_all, 0, cfg)
+    o = jnp.einsum("bshk,hkd->bsd", o, lp["wo"].astype(h.dtype))
+    # name the post-all-reduce activations: the "collectives" remat policy
+    # saves exactly these, so the backward pass re-runs local compute but
+    # never re-executes the TP all-reduces (EXPERIMENTS.md §Perf dense-1).
+    o = checkpoint_name(o, "attn_out")
+    res_seq = "seq_sp" if cfg.sequence_parallel else "seq"
+    x = x + constrain(o, rules, "batch", res_seq, "embed")
+
+    h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.num_experts:
+        m = moe_block(h2, lp, cfg, rules)
+    else:
+        m = swiglu(h2, lp["w_gate"], lp["w_up"], lp["w_down"], rules)
+    m = checkpoint_name(m, "mlp_out")
+    x = x + constrain(m, rules, "batch", res_seq, "embed")
+    return x, (k, v)
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    if cfg.remat == "collectives":
+        policy = jax.checkpoint_policies.save_only_these_names(
+            "attn_out", "mlp_out")
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def forward(params: PyTree, tokens: jax.Array, cfg: ModelConfig,
+            rules: LogicalRules, prefix_embeds: Optional[jax.Array] = None,
+            return_kv: bool = False, return_hidden: bool = False):
+    """Token logits.  ``prefix_embeds`` (B, P, d): precomputed patch/frame
+    embeddings of the modality frontend stub (vlm/audio), prepended."""
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(cfg.compute_dtype), x], axis=1)
+    x = constrain(x, rules, "batch", "seq", "embed")
+    positions = jnp.arange(x.shape[1])
+
+    def body(carry, lp):
+        y, (k, v) = decoder_layer(carry, lp, cfg, rules, positions)
+        return y, (k, v) if return_kv else None
+
+    x, kv = jax.lax.scan(_remat(body, cfg), x, params["layers"])
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params.get("lm_head", None)
+    if head is None:
+        head = params["embed"].T
+    if return_hidden:
+        return x, head
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    logits = constrain(logits, rules, "batch", "seq", "vocab")
+    if return_kv:
+        return logits, kv
+    return logits

@@ -1,0 +1,334 @@
+"""Zamba2 hybrid: Mamba2 (SSD) backbone + one *shared* attention block
+applied every ``shared_attn_every`` layers (arXiv:2411.15242).
+
+Mamba2 block: in_proj -> (gate z, conv stream x, B, C, dt); causal
+depthwise conv (width 4); SSD recurrence with scalar-per-head decay
+``a_t = exp(-dt * softplus(A))`` on the shared chunked engine; gated
+out_proj.  The shared block (GQA attention + SwiGLU) has ONE set of
+weights reused at every application — Zamba2's parameter-saving trick —
+and is entered via ``lax.cond`` inside the layer scan, so the HLO stays
+one-layer-sized.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from .common import (LogicalRules, ModelConfig, attention, constrain,
+                     rms_norm, rope, swiglu)
+from .ssm import chunked_linear_attention, recurrence_step
+
+CONV_WIDTH = 4
+MAMBA_HEAD = 64
+
+
+def dims(cfg: ModelConfig):
+    d_inner = 2 * cfg.d_model
+    heads = d_inner // MAMBA_HEAD
+    return d_inner, heads, cfg.ssm_state or 64
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    L, d = cfg.num_layers, cfg.d_model
+    di, H, N = dims(cfg)
+    hd = cfg.resolved_head_dim
+    return {
+        "embed": (cfg.vocab_size, d),
+        "layers": {
+            "ln": (L, d),
+            "in_z": (L, d, di), "in_x": (L, d, di),
+            # B/C are per-GROUP (shared across heads), as in Mamba2 — a
+            # per-head parameterisation would add ~50M params/layer.
+            "in_b": (L, d, N), "in_c": (L, d, N), "in_dt": (L, d, H),
+            "conv": (L, CONV_WIDTH, di),
+            "a_log": (L, H), "dt_bias": (L, H), "d_skip": (L, H),
+            "out": (L, di, d),
+        },
+        "shared": {
+            "ln1": (d,), "ln2": (d,),
+            "wq": (d, cfg.num_heads, hd), "wk": (d, cfg.num_kv_heads, hd),
+            "wv": (d, cfg.num_kv_heads, hd), "wo": (cfg.num_heads, hd, d),
+            "w_gate": (d, cfg.d_ff), "w_up": (d, cfg.d_ff), "w_down": (cfg.d_ff, d),
+        },
+        "ln_f": (d,),
+        "lm_head": (d, cfg.vocab_size),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    return {
+        "embed": ("vocab", "fsdp"),
+        "layers": {
+            "ln": ("layers", "fsdp"),
+            "in_z": ("layers", "fsdp", "mlp"), "in_x": ("layers", "fsdp", "mlp"),
+            "in_b": ("layers", "fsdp", "ssm_state"),
+            "in_c": ("layers", "fsdp", "ssm_state"),
+            "in_dt": ("layers", "fsdp", "heads"),
+            "conv": ("layers", None, "mlp"),
+            "a_log": ("layers", "heads"), "dt_bias": ("layers", "heads"),
+            "d_skip": ("layers", "heads"),
+            "out": ("layers", "mlp", "fsdp"),
+        },
+        "shared": {
+            "ln1": ("fsdp",), "ln2": ("fsdp",),
+            "wq": ("fsdp", "heads", "head_dim"), "wk": ("fsdp", "kv", "head_dim"),
+            "wv": ("fsdp", "kv", "head_dim"), "wo": ("heads", "head_dim", "fsdp"),
+            "w_gate": ("fsdp", "mlp"), "w_up": ("fsdp", "mlp"),
+            "w_down": ("mlp", "fsdp"),
+        },
+        "ln_f": ("fsdp",),
+        "lm_head": ("fsdp", "vocab"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, carry: jax.Array | None = None):
+    """Depthwise causal conv, width CONV_WIDTH.  x: (B,S,di), w: (W,di).
+    ``carry``: (B, W-1, di) previous tokens (decode)."""
+    pad = carry if carry is not None else jnp.zeros(
+        (x.shape[0], CONV_WIDTH - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(
+        xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+        for i in range(CONV_WIDTH)
+    )
+    return jax.nn.silu(out), xp[:, -(CONV_WIDTH - 1):]
+
+
+def mamba_block(x, lp, cfg: ModelConfig, rules: LogicalRules,
+                state=None, conv_carry=None, return_state=False):
+    b, s, d = x.shape
+    di, H, N = dims(cfg)
+    z = jnp.einsum("bsd,de->bse", x, lp["in_z"].astype(x.dtype))
+    xs = jnp.einsum("bsd,de->bse", x, lp["in_x"].astype(x.dtype))
+    xs, conv_out = _causal_conv(xs, lp["conv"], conv_carry)
+    xs = constrain(xs, rules, "batch", "seq", "mlp")
+    B = jnp.einsum("bsd,dn->bsn", x, lp["in_b"].astype(x.dtype))
+    C = jnp.einsum("bsd,dn->bsn", x, lp["in_c"].astype(x.dtype))
+    B = jnp.broadcast_to(B[:, :, None], (b, s, H, N))
+    C = jnp.broadcast_to(C[:, :, None], (b, s, H, N))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, lp["in_dt"].astype(x.dtype)).astype(jnp.float32)
+        + lp["dt_bias"].astype(jnp.float32)[None, None])
+    a = -jnp.exp(lp["a_log"].astype(jnp.float32))[None, None]       # (1,1,H)
+    log_w = (dt * a)[..., None]                                      # (B,S,H,1)
+    xh = xs.reshape(b, s, H, MAMBA_HEAD)
+    # SSD recurrence: k=B (state dim), v=dt*x (head dim), q=C
+    v = (xh.astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+    log_w_full = jnp.broadcast_to(log_w, (b, s, H, N))
+    if return_state or state is not None:
+        y, new_state = chunked_linear_attention(
+            C, B, v, log_w_full, chunk=cfg.attention_chunk // 8 or 128,
+            initial_state=state, return_state=True)
+    else:
+        y = chunked_linear_attention(C, B, v, log_w_full,
+                                     chunk=cfg.attention_chunk // 8 or 128)
+        new_state = None
+    y = y + xh * lp["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = (y.reshape(b, s, di) * jax.nn.silu(z))
+    out = jnp.einsum("bse,ed->bsd", y, lp["out"].astype(x.dtype))
+    if return_state:
+        return out, new_state, conv_out
+    return out
+
+
+def shared_block(x, sp, cfg: ModelConfig, rules: LogicalRules, positions,
+                 cache=None):
+    """The shared GQA-attention + SwiGLU block (one weight set)."""
+    h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, sp["wq"].astype(h.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", h, sp["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", h, sp["wv"].astype(h.dtype))
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    o = attention(q, k, v, 0, cfg)
+    x = x + jnp.einsum("bshk,hkd->bsd", o, sp["wo"].astype(h.dtype))
+    h2 = rms_norm(x, sp["ln2"], cfg.norm_eps)
+    x = x + swiglu(h2, sp["w_gate"], sp["w_up"], sp["w_down"], rules)
+    return x
+
+
+def _split_groups(layers: dict, L: int, period: int):
+    """Slice the (L, ...)-stacked layer params into (G, period, ...) full
+    groups + an (R, ...) remainder (no shared attention after those)."""
+    G = L // period
+    R = L - G * period
+
+    def head(x):
+        return x[: G * period].reshape((G, period) + x.shape[1:])
+
+    def tail(x):
+        return x[G * period:]
+
+    import jax
+
+    grouped = jax.tree.map(head, layers) if G else None
+    rest = jax.tree.map(tail, layers) if R else None
+    return grouped, rest, G, R
+
+
+def forward(params, tokens, cfg: ModelConfig, rules: LogicalRules,
+            return_hidden: bool = False, **_):
+    x = params["embed"].astype(cfg.compute_dtype)[tokens]
+    x = constrain(x, rules, "batch", "seq", "embed")
+    positions = jnp.arange(x.shape[1])
+    sp = params["shared"]
+    grouped, rest, G, R = _split_groups(params["layers"], cfg.num_layers,
+                                        cfg.shared_attn_every)
+
+    def mamba_body(carry, lp):
+        h = rms_norm(carry, lp["ln"], cfg.norm_eps)
+        mb = checkpoint_name(mamba_block(h, lp, cfg, rules), "mlp_out")
+        carry = carry + constrain(mb, rules, "batch", "seq", "embed")
+        return carry, None
+
+    def _remat(fn):
+        if cfg.remat == "none":
+            return fn
+        if cfg.remat == "collectives":
+            return jax.checkpoint(fn, policy=jax.checkpoint_policies
+                                  .save_only_these_names("attn_out", "mlp_out"))
+        return jax.checkpoint(fn)
+
+    mamba_step = _remat(mamba_body)
+
+    def group_body(carry, glp):
+        carry, _ = jax.lax.scan(mamba_step, carry, glp)
+        carry = checkpoint_name(
+            shared_block(carry, sp, cfg, rules, positions), "attn_out")
+        return carry, None
+
+    if G:
+        x, _ = jax.lax.scan(_remat(group_body), x, grouped)
+    if R:
+        x, _ = jax.lax.scan(mamba_step, x, rest)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    if return_hidden:
+        return x, params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    return constrain(logits, rules, "batch", "seq", "vocab")
+
+
+# --------------------------------------------------------------------------
+# decode (O(1) mamba state + seq-sharded shared-attention KV cache)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    di, H, N = dims(cfg)
+    L = cfg.num_layers
+    G = L // cfg.shared_attn_every
+    hd = cfg.resolved_head_dim
+    return {
+        "ssm": jnp.zeros((L, batch, H, N, MAMBA_HEAD), jnp.float32),
+        "conv": jnp.zeros((L, batch, CONV_WIDTH - 1, di), cfg.compute_dtype),
+        "k": jnp.zeros((G, batch, max_seq, cfg.num_kv_heads, hd), cfg.compute_dtype),
+        "v": jnp.zeros((G, batch, max_seq, cfg.num_kv_heads, hd), cfg.compute_dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ssm": ("layers", "cache_batch", "heads", "ssm_state", None),
+        "conv": ("layers", "cache_batch", None, "mlp"),
+        "k": ("layers", "cache_batch", "cache_seq", "kv", "head_dim"),
+        "v": ("layers", "cache_batch", "cache_seq", "kv", "head_dim"),
+        "length": (),
+    }
+
+
+def _mamba_decode_step(x, lp, cfg, state, conv_carry):
+    """x: (B,1,d).  Returns (out, new_state, new_conv_carry)."""
+    b = x.shape[0]
+    di, H, N = dims(cfg)
+    z = jnp.einsum("bsd,de->bse", x, lp["in_z"].astype(x.dtype))
+    xs = jnp.einsum("bsd,de->bse", x, lp["in_x"].astype(x.dtype))
+    xs, conv_out = _causal_conv(xs, lp["conv"], conv_carry)
+    B = jnp.einsum("bsd,dn->bsn", x, lp["in_b"].astype(x.dtype))[:, 0]
+    C = jnp.einsum("bsd,dn->bsn", x, lp["in_c"].astype(x.dtype))[:, 0]
+    B = jnp.broadcast_to(B[:, None], (B.shape[0], H, N))
+    C = jnp.broadcast_to(C[:, None], (C.shape[0], H, N))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, lp["in_dt"].astype(x.dtype)).astype(jnp.float32)
+        + lp["dt_bias"].astype(jnp.float32)[None, None])[:, 0]
+    a = -jnp.exp(lp["a_log"].astype(jnp.float32))[None]
+    log_w = jnp.broadcast_to((dt * a)[..., None], (b, H, N))
+    xh = xs.reshape(b, H, MAMBA_HEAD)
+    v = (xh.astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+    y, new_state = recurrence_step(C, B, v, log_w, state)
+    y = y + xh * lp["d_skip"].astype(x.dtype)[None, :, None]
+    y = (y.reshape(b, 1, di) * jax.nn.silu(z))
+    out = jnp.einsum("bse,ed->bsd", y, lp["out"].astype(x.dtype))
+    return out, new_state, conv_out
+
+
+def decode_step(params, token, cache, cfg: ModelConfig, rules: LogicalRules):
+    """One decode step.  Shared-attention K/V caches are sequence-sharded
+    over the model axis; the new K/V is written with a one-hot mask (no
+    cross-shard dynamic slice) and attention runs masked over the cache."""
+    from .common import chunked_attention
+
+    x = params["embed"].astype(cfg.compute_dtype)[token][:, None]
+    sp = params["shared"]
+    length = cache["length"]
+    max_seq = cache["k"].shape[2]
+    grouped, rest, G, R = _split_groups(params["layers"], cfg.num_layers,
+                                        cfg.shared_attn_every)
+    p = cfg.shared_attn_every
+
+    def slice_states(tree, lo, n):
+        return jax.tree.map(lambda a: a[lo:lo + n], tree)
+
+    def mamba_scan(x, glp, ssm, conv):
+        def body(carry, inp):
+            lp, st, cv = inp
+            h = rms_norm(carry, lp["ln"], cfg.norm_eps)
+            out, st2, cv2 = _mamba_decode_step(h, lp, cfg, st, cv)
+            return carry + out, (st2, cv2)
+
+        x, (ssm2, conv2) = jax.lax.scan(body, x, (glp, ssm, conv))
+        return x, ssm2, conv2
+
+    onehot = (jnp.arange(max_seq) == length).astype(cfg.compute_dtype)
+
+    def shared_decode(x, kc, vc):
+        h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, sp["wq"].astype(h.dtype))
+        k = jnp.einsum("bsd,dhk->bshk", h, sp["wk"].astype(h.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", h, sp["wv"].astype(h.dtype))
+        pos = length[None]
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+        kc = kc * (1 - onehot)[None, :, None, None] + k * onehot[None, :, None, None]
+        vc = vc * (1 - onehot)[None, :, None, None] + v * onehot[None, :, None, None]
+        o = chunked_attention(q, kc, vc, causal_offset=length,
+                              chunk=cfg.attention_chunk)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, sp["wo"].astype(h.dtype))
+        h2 = rms_norm(x, sp["ln2"], cfg.norm_eps)
+        x = x + swiglu(h2, sp["w_gate"], sp["w_up"], sp["w_down"], rules)
+        return x, kc, vc
+
+    new_ssm, new_conv, new_k, new_v = [], [], [], []
+    for g in range(G):
+        glp = jax.tree.map(lambda a: a[g], grouped)
+        x, s2, c2 = mamba_scan(x, glp, slice_states(cache["ssm"], g * p, p),
+                               slice_states(cache["conv"], g * p, p))
+        x, kc, vc = shared_decode(x, cache["k"][g], cache["v"][g])
+        new_ssm.append(s2); new_conv.append(c2)
+        new_k.append(kc); new_v.append(vc)
+    if R:
+        x, s2, c2 = mamba_scan(x, rest, slice_states(cache["ssm"], G * p, R),
+                               slice_states(cache["conv"], G * p, R))
+        new_ssm.append(s2); new_conv.append(c2)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    new_cache = {
+        "ssm": jnp.concatenate(new_ssm, axis=0),
+        "conv": jnp.concatenate(new_conv, axis=0),
+        "k": jnp.stack(new_k, axis=0) if G else cache["k"],
+        "v": jnp.stack(new_v, axis=0) if G else cache["v"],
+        "length": length + 1,
+    }
+    return logits[:, 0], new_cache

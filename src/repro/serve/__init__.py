@@ -1,0 +1,3 @@
+from .decode import (abstract_cache, cache_shardings, cache_specs,  # noqa: F401
+                     init_cache, make_prefill, make_serve_step,
+                     serve_input_specs)

@@ -1,0 +1,292 @@
+"""Serving layer: one-new-token decode with a sharded KV cache.
+
+Transformer families: the KV cache is laid out (L, B, S, KV, hd) with the
+*sequence dimension sharded over the model axis* (``cache_seq`` rule) and
+batch over (pod, data).  Rationale: GQA kv-head counts (4–8 on these
+archs) do not divide a 16-way model axis, so head-sharding the cache
+either pads or replicates; sequence sharding splits both the memory and
+the attention FLOPs/bytes 16 ways, at the cost of one small cross-shard
+reduction per step (the flash-style (m, l, o) combine, which XLA emits
+from the masked chunked attention below).
+
+The new token's K/V is written with a one-hot mask instead of a dynamic
+slice: a masked elementwise update shards cleanly over the sequence axis
+with zero collectives (the baseline; see EXPERIMENTS.md §Perf for the
+shard_map local-update optimisation that removes the full-cache rewrite).
+
+SSM/hybrid families dispatch to their O(1)-state decode (rwkv6, zamba2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import rwkv6, zamba2
+from repro.models.common import (LogicalRules, ModelConfig, chunked_attention,
+                                 constrain, rms_norm, rope, swiglu)
+from repro.models.transformer import moe_block
+
+
+# --------------------------------------------------------------------------
+# sequence-sharded decode attention (shard_map)
+#
+# The cache seq dim is sharded over `model`; in pjit-auto mode the chunked
+# attention scan re-gathers remote chunks every layer (68 GB/step measured
+# on llama3 decode_32k — §Perf decode-1).  The manual version below keeps
+# everything local: each shard (a) writes the new K/V at `length` iff that
+# position falls in its slice — a one-position write, no full-cache rewrite
+# — and (b) computes flash-style partial (m, l, o) over its slice; one tiny
+# renormalised psum combines the partials.
+
+
+def _decode_attn_local(q, kc, vc, kn, vn, length, *, axis):
+    """Per-shard body.  q/kn/vn: (B,1,H|KV,D) replicated; kc/vc:
+    (B, S_loc, KV, D) local cache slice.  Returns (o, kc, vc)."""
+    b, s_loc, hkv, dh = kc.shape
+    hq = q.shape[2]
+    group = hq // hkv
+    i = jax.lax.axis_index(axis)
+    off = i * s_loc
+    pos = length - off
+    in_range = (pos >= 0) & (pos < s_loc)
+    posc = jnp.clip(pos, 0, s_loc - 1)
+    upd = lambda c, n: jax.lax.dynamic_update_slice_in_dim(
+        c, jnp.where(in_range, n, jax.lax.dynamic_slice_in_dim(c, posc, 1, 1)),
+        posc, axis=1)
+    kc = upd(kc, kn)
+    vc = upd(vc, vn)
+
+    qg = q.reshape(b, 1, hkv, group, dh).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kc.astype(jnp.float32))
+    s = s / np.sqrt(dh)
+    kpos = off + jnp.arange(s_loc)
+    mask = kpos[None, None, None, None, :] <= length
+    s = jnp.where(mask, s, -1e30)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+    m_glob = jax.lax.pmax(m, axis)
+    corr = jnp.exp(m - m_glob)
+    l_glob = jax.lax.psum(l * corr, axis)
+    o_glob = jax.lax.psum(o * corr[..., None], axis)
+    out = o_glob / jnp.maximum(l_glob, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, 1, hq, dh)
+    return out.astype(vn.dtype), kc, vc
+
+
+def sharded_decode_attention(q, kc, vc, kn, vn, length, rules: LogicalRules):
+    """Dispatch: shard_map over `model` when the cache seq dim is sharded,
+    else the plain masked chunked attention."""
+    mesh = rules.mesh
+    s = kc.shape[1]
+    if "model" not in mesh.shape or mesh.shape["model"] == 1 or \
+            s % mesh.shape["model"] != 0:
+        max_seq = kc.shape[1]
+        onehot = (jnp.arange(max_seq) == length).astype(kc.dtype)
+        kc = kc * (1 - onehot)[None, :, None, None] + kn * onehot[None, :, None, None]
+        vc = vc * (1 - onehot)[None, :, None, None] + vn * onehot[None, :, None, None]
+        o = chunked_attention(q, kc, vc, causal_offset=length, chunk=2048)
+        return o, kc, vc
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    batch = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    rep = P(batch, None, None, None)
+    cachep = P(batch, "model", None, None)
+    fn = functools.partial(_decode_attn_local, axis="model")
+    return shard_map(
+        fn, mesh=mesh,
+        in_specs=(rep, cachep, cachep, rep, rep, P()),
+        out_specs=(rep, cachep, cachep),
+        check_rep=False,
+    )(q, kc, vc, kn, vn, length)
+
+
+# --------------------------------------------------------------------------
+# transformer-family cache
+
+
+def _tf_init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    hd = cfg.resolved_head_dim
+    shape = (cfg.num_layers, batch, max_seq, cfg.num_kv_heads, hd)
+    return {
+        "k": jnp.zeros(shape, cfg.compute_dtype),
+        "v": jnp.zeros(shape, cfg.compute_dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def _tf_cache_specs(cfg: ModelConfig) -> dict:
+    kv = ("layers", "cache_batch", "cache_seq", "kv", "head_dim")
+    return {"k": kv, "v": kv, "length": ()}
+
+
+def _tf_decode_step(params, token, cache, cfg: ModelConfig, rules: LogicalRules):
+    x = params["embed"].astype(cfg.compute_dtype)[token][:, None]   # (B,1,d)
+    length = cache["length"]
+    max_seq = cache["k"].shape[2]
+    # Pin the STACKED cache sharding: without this, SPMD propagation shards
+    # the layer dim over `model` for the scan and then all-gathers the full
+    # (B, S, KV, hd) slice every layer (measured 68 GB/step on llama3
+    # decode_32k — EXPERIMENTS.md §Perf decode-1).
+    stacked = ("layers", "cache_batch", "cache_seq", "kv", "head_dim")
+    cache = dict(cache,
+                 k=constrain(cache["k"], rules, *stacked),
+                 v=constrain(cache["v"], rules, *stacked))
+
+    stacked_spec = ("layers", "cache_batch", "cache_seq", "kv", "head_dim")
+
+    def body(carry, inputs):
+        # KV caches ride in the CARRY (stable sharding across iterations) —
+        # as scan xs, SPMD shards the stacked layer dim over `model` and
+        # all-gathers a full (B, S, KV, hd) slice every layer (§Perf
+        # decode-1: 68 GB -> 4 GB per step).
+        x, kall, vall = carry
+        lp, li = inputs
+        kc = jax.lax.dynamic_index_in_dim(kall, li, axis=0, keepdims=False)
+        vc = jax.lax.dynamic_index_in_dim(vall, li, axis=0, keepdims=False)
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"].astype(h.dtype))
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"].astype(h.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"].astype(h.dtype))
+        pos = length[None]
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+        o, kc, vc = sharded_decode_attention(q, kc, vc, k, v, length, rules)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, lp["wo"].astype(h.dtype))
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.num_experts:
+            m = moe_block(h2, lp, cfg, rules)
+        else:
+            m = swiglu(h2, lp["w_gate"], lp["w_up"], lp["w_down"], rules)
+        x = x + m
+        kall = jax.lax.dynamic_update_index_in_dim(kall, kc, li, axis=0)
+        vall = jax.lax.dynamic_update_index_in_dim(vall, vc, li, axis=0)
+        kall = constrain(kall, rules, *stacked_spec)
+        vall = constrain(vall, rules, *stacked_spec)
+        return (x, kall, vall), None
+
+    nl = cfg.num_layers
+    (x, ks, vs), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"]),
+        (params["layers"], jnp.arange(nl, dtype=jnp.int32)))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params.get("lm_head", None)
+    if head is None:
+        head = params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    return logits[:, 0], {"k": ks, "v": vs, "length": length + 1}
+
+
+# --------------------------------------------------------------------------
+# prefill (transformer family): one forward pass builds the KV cache
+
+
+def make_prefill(cfg: ModelConfig, rules: LogicalRules, max_seq: int):
+    """prefill(params, tokens) -> (last_logits, cache): runs the prompt in
+    one forward pass (transformer family: collects per-layer K/V from the
+    layer scan into a ``max_seq`` cache).  SSM/hybrid families replay
+    through their O(1) decode step instead (their state IS the cache)."""
+    from repro.models import api
+
+    if cfg.family in ("ssm", "hybrid"):
+        step = make_serve_step(cfg, rules)
+
+        def prefill_ssm(params, tokens):
+            cache = init_cache(cfg, tokens.shape[0], max_seq)
+
+            def body(cache, tok):
+                logits, cache = step(params, cache, tok)
+                return cache, logits
+
+            cache, logits = jax.lax.scan(body, cache, tokens.T)
+            return logits[-1], cache
+
+        return prefill_ssm
+
+    def prefill(params, tokens):
+        b, s = tokens.shape
+        logits, kv = api.forward(params, tokens, cfg, rules, return_kv=True)
+        k, v = kv                                     # (L, B, S, KV, hd)
+        pad = max_seq - s
+        if pad > 0:
+            k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        stacked = ("layers", "cache_batch", "cache_seq", "kv", "head_dim")
+        cache = {
+            "k": constrain(k, rules, *stacked),
+            "v": constrain(v, rules, *stacked),
+            "length": jnp.int32(s),
+        }
+        return logits[:, -1], cache
+
+    return prefill
+
+
+# --------------------------------------------------------------------------
+# family dispatch
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    if cfg.family == "ssm":
+        return rwkv6.init_cache(cfg, batch)
+    if cfg.family == "hybrid":
+        return zamba2.init_cache(cfg, batch, max_seq)
+    return _tf_init_cache(cfg, batch, max_seq)
+
+
+def cache_specs(cfg: ModelConfig) -> dict:
+    if cfg.family == "ssm":
+        return rwkv6.cache_specs(cfg)
+    if cfg.family == "hybrid":
+        return zamba2.cache_specs(cfg)
+    return _tf_cache_specs(cfg)
+
+
+def make_serve_step(cfg: ModelConfig, rules: LogicalRules):
+    """serve_step(params, cache, tokens) -> (logits, new_cache): one new
+    token per sequence against the existing context."""
+    if cfg.family == "ssm":
+        def step(params, cache, tokens):
+            return rwkv6.decode_step(params, tokens, cache, cfg, rules)
+    elif cfg.family == "hybrid":
+        def step(params, cache, tokens):
+            return zamba2.decode_step(params, tokens, cache, cfg, rules)
+    else:
+        def step(params, cache, tokens):
+            return _tf_decode_step(params, tokens, cache, cfg, rules)
+    return step
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                   rules: LogicalRules) -> Any:
+    """ShapeDtypeStruct cache with shardings (dry-run)."""
+    cache = jax.eval_shape(lambda: init_cache(cfg, batch, max_seq))
+    specs = cache_specs(cfg)
+
+    def attach(leaf_path, leaf):
+        name = leaf_path[0].key
+        sp = specs[name]
+        sh = rules.sharding(*sp, dims=leaf.shape) if sp else rules.sharding()
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=sh)
+
+    flat = jax.tree_util.tree_flatten_with_path(cache)
+    leaves = [attach(p, l) for p, l in flat[0]]
+    return jax.tree_util.tree_unflatten(flat[1], leaves)
+
+
+def cache_shardings(cfg: ModelConfig, rules: LogicalRules, batch: int,
+                    max_seq: int) -> Any:
+    ab = abstract_cache(cfg, batch, max_seq, rules)
+    return jax.tree.map(lambda l: l.sharding, ab)
+
+
+def serve_input_specs(cfg: ModelConfig, batch: int, rules: LogicalRules):
+    return jax.ShapeDtypeStruct(
+        (batch,), jnp.int32, sharding=rules.sharding("batch", dims=(batch,)))

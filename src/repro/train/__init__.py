@@ -1,0 +1,6 @@
+from .checkpoint import CheckpointManager  # noqa: F401
+from .data import DataConfig, PrefetchLoader, SyntheticLM  # noqa: F401
+from .optimizer import OptimizerConfig, adamw_update, lr_at  # noqa: F401
+from .step import (TrainState, abstract_state, batch_specs,  # noqa: F401
+                   chunked_cross_entropy, init_state, make_train_step,
+                   state_shardings)

@@ -1,0 +1,141 @@
+"""Fault-tolerant checkpoint manager.
+
+Requirements at 1000+-node scale (DESIGN.md §10):
+
+- **atomicity** — a checkpoint is either fully visible or absent: leaves
+  are written into ``<dir>/tmp.step_N``, fsynced, then the directory is
+  atomically renamed to ``step_N``;
+- **async** — a background thread does the serialisation so the train
+  loop only blocks on device->host transfer;
+- **restart** — ``latest_step`` / ``restore`` pick up the newest complete
+  checkpoint; partially-written ``tmp.*`` dirs from a crashed run are
+  ignored and garbage-collected;
+- **elastic re-shard** — ``restore(..., shardings=...)`` places leaves
+  under *any* target sharding, so a checkpoint written on one DP degree
+  (or mesh) resumes on another — this is the mechanism CarbonFlex's
+  elastic scaling rides on (the paper's scancel + resubmit, §5).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import numpy as np
+
+import jax
+
+PyTree = Any
+_SEP = "__"
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(_part(p) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def _part(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._gc_tmp()
+
+    # --- write ------------------------------------------------------------
+
+    def save(self, step: int, tree: PyTree, blocking: bool = False) -> None:
+        host = _flatten(tree)          # device->host happens here
+        self.wait()
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host), daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def _write(self, step: int, host: dict[str, np.ndarray]) -> None:
+        tmp = os.path.join(self.dir, f"tmp.step_{step:09d}")
+        final = os.path.join(self.dir, f"step_{step:09d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "leaves.npz"), **host)
+        meta = {"step": step, "keys": sorted(host.keys())}
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)          # atomic visibility
+        self._gc_old()
+
+    def wait(self) -> None:
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+
+    # --- read -------------------------------------------------------------
+
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and os.path.exists(
+                    os.path.join(self.dir, name, "meta.json")):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, template: PyTree, step: Optional[int] = None,
+                shardings: Optional[PyTree] = None) -> PyTree:
+        """Load into the structure of ``template``; optionally re-shard
+        every leaf onto ``shardings`` (elastic rescale / new mesh)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:09d}", "leaves.npz")
+        data = np.load(path)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        sh_flat = (jax.tree_util.tree_flatten(shardings)[0]
+                   if shardings is not None else [None] * len(flat))
+        leaves = []
+        for (pth, leaf), sh in zip(flat, sh_flat):
+            key = _SEP.join(_part(p) for p in pth)
+            arr = data[key]
+            if hasattr(leaf, "dtype"):
+                arr = arr.astype(leaf.dtype)
+            leaves.append(jax.device_put(arr, sh) if sh is not None
+                          else jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(template), leaves)
+
+    # --- hygiene ----------------------------------------------------------
+
+    def _gc_old(self) -> None:
+        steps = self.steps()
+        for s in steps[: max(len(steps) - self.keep, 0)]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    def _gc_tmp(self) -> None:
+        for name in os.listdir(self.dir):
+            if name.startswith("tmp."):
+                shutil.rmtree(os.path.join(self.dir, name), ignore_errors=True)

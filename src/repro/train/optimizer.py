@@ -1,0 +1,93 @@
+"""AdamW + LR schedules (cosine and MiniCPM's WSD), sharding-preserving.
+
+The optimizer is hand-rolled (no optax dependency in this container):
+moments live in ``cfg.moment_dtype`` — fp32 by default, bf16 for the
+>=100B configs so a single 256-chip pod holds params+moments (DESIGN.md
+§9) — and inherit the parameter shardings leaf-for-leaf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"       # "cosine" | "wsd" | "const"
+    wsd_stable_frac: float = 0.8   # WSD: fraction of steps at peak LR
+
+
+def lr_at(step: jnp.ndarray, cfg: OptimizerConfig) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum((s + 1.0) / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "const":
+        return cfg.lr * warm
+    if cfg.schedule == "wsd":
+        # Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395): hold peak LR for
+        # the stable phase, then decay exponentially to 10%.
+        stable_end = cfg.wsd_stable_frac * cfg.total_steps
+        decay_len = jnp.maximum(cfg.total_steps - stable_end, 1.0)
+        frac = jnp.clip((s - stable_end) / decay_len, 0.0, 1.0)
+        decay = jnp.power(0.1, frac)
+        return cfg.lr * warm * jnp.where(s < stable_end, 1.0, decay)
+    # cosine
+    prog = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    return cfg.lr * warm * (0.5 * (1.0 + jnp.cos(jnp.pi * prog)))
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+def init_moments(params: Any, moment_dtype) -> tuple[Any, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return jax.tree.map(zeros, params), jax.tree.map(zeros, params)
+
+
+def adamw_update(params, grads, m, v, step, opt: OptimizerConfig, moment_dtype):
+    """One AdamW step.  Returns (params, m, v, lr, grad_norm)."""
+    grads, gnorm = clip_by_global_norm(grads, opt.grad_clip)
+    lr = lr_at(step, opt)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - jnp.power(opt.b1, t)
+    bc2 = 1.0 - jnp.power(opt.b2, t)
+
+    def upd(p, g, m_, v_):
+        g32 = g.astype(jnp.float32)
+        m_new = opt.b1 * m_.astype(jnp.float32) + (1 - opt.b1) * g32
+        v_new = opt.b2 * v_.astype(jnp.float32) + (1 - opt.b2) * jnp.square(g32)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + opt.eps) + opt.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return (p_new.astype(p.dtype), m_new.astype(moment_dtype),
+                v_new.astype(moment_dtype))
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(m)
+    flat_v = treedef.flatten_up_to(v)
+    out = [upd(p, g, m_, v_) for p, g, m_, v_ in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, new_m, new_v, lr, gnorm

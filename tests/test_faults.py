@@ -1,0 +1,60 @@
+"""Simulator-level fault/straggler injection + policy compensation."""
+import numpy as np
+
+from repro.core import CarbonService, ClusterConfig, baselines, simulate
+from repro.core.policy import CarbonFlexMPCPolicy
+from repro.core.simulator import FaultModel
+from repro.traces import TraceSpec, generate_trace
+
+WEEK = 24 * 7
+
+
+def _world(seed=13, cap=20):
+    cluster = ClusterConfig.default(capacity=cap)
+    ci = CarbonService.synthetic("california", WEEK * 3, seed=seed)
+    jobs = generate_trace(TraceSpec(hours=WEEK, capacity=cap, seed=seed + 1),
+                          cluster.queues)
+    return cluster, ci, jobs
+
+
+class TestFaultModel:
+    def test_deterministic(self):
+        a = FaultModel(straggler_rate=0.2, failure_rate=0.1, seed=5)
+        b = FaultModel(straggler_rate=0.2, failure_rate=0.1, seed=5)
+        seq_a = [a.progress_factor(t, 0) for t in range(50)]
+        seq_b = [b.progress_factor(t, 0) for t in range(50)]
+        assert seq_a == seq_b
+        assert set(seq_a) <= {0.0, 0.5, 1.0}
+
+    def test_all_jobs_still_complete_under_faults(self):
+        cluster, ci, jobs = _world()
+        res = simulate(jobs, ci, cluster, baselines.CarbonAgnosticPolicy(),
+                       horizon=WEEK,
+                       faults=FaultModel(straggler_rate=0.15,
+                                         failure_rate=0.05, seed=2))
+        assert (res.completion >= 0).all()
+
+    def test_faults_cost_energy_and_delay(self):
+        cluster, ci, jobs = _world()
+        clean = simulate(jobs, ci, cluster, baselines.CarbonAgnosticPolicy(),
+                         horizon=WEEK)
+        faulty = simulate(jobs, ci, cluster, baselines.CarbonAgnosticPolicy(),
+                          horizon=WEEK,
+                          faults=FaultModel(straggler_rate=0.2,
+                                            failure_rate=0.1, seed=2))
+        assert faulty.energy_kwh > clean.energy_kwh     # lost slots re-run
+        assert faulty.completion.max() >= clean.completion.max()
+
+    def test_carbonaware_policy_survives_faults(self):
+        """CarbonFlex keeps saving carbon under faults; the violation
+        feedback loop (Algorithm 2) absorbs the lost progress."""
+        cluster, ci, jobs = _world(cap=20)
+        base = simulate(jobs, ci, cluster, baselines.CarbonAgnosticPolicy(),
+                        horizon=WEEK,
+                        faults=FaultModel(straggler_rate=0.15, seed=3))
+        pol = CarbonFlexMPCPolicy()
+        pol.warm_start(jobs)
+        res = simulate(jobs, ci, cluster, pol, horizon=WEEK,
+                       faults=FaultModel(straggler_rate=0.15, seed=3))
+        assert (res.completion >= 0).all()
+        assert res.savings_vs(base) > 5.0

@@ -1,0 +1,81 @@
+"""HLO static-analysis tests: trip-count weighting, collectives, flops."""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlo_analysis import (_shape_bytes, analyze_collectives,
+                                       analyze_module)
+
+SYNTH = """
+HloModule test
+
+%body.1 (p: (s32[], f32[128,64])) -> (s32[], f32[128,64]) {
+  %p = (s32[], f32[128,64]) parameter(0)
+  %ar = f32[128,64]{1,0} all-reduce(%gte), replica_groups={}
+  ROOT %t = (s32[], f32[128,64]) tuple(%i, %ar)
+}
+
+%cond.1 (p: (s32[], f32[128,64])) -> pred[] {
+  %p = (s32[], f32[128,64]) parameter(0)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main.1 (a: f32[128,64]) -> f32[128,64] {
+  %a = f32[128,64]{1,0} parameter(0)
+  %w = (s32[], f32[128,64]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"7"}}
+  %ag = f32[256,64]{1,0} all-gather(%a), dimensions={0}
+  ROOT %r = f32[128,64]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+class TestShapeBytes:
+    def test_simple(self):
+        assert _shape_bytes("f32[128,64]{1,0}") == 128 * 64 * 4
+        assert _shape_bytes("bf16[2,3]") == 12
+        assert _shape_bytes("(f32[4], s32[2])") == 16 + 8
+
+    def test_scalar_and_unknown(self):
+        assert _shape_bytes("f32[]") == 4
+        assert _shape_bytes("token[]") == 0
+
+
+class TestSyntheticModule:
+    def test_trip_count_weighting(self):
+        stats = analyze_collectives(SYNTH)
+        ar = 128 * 64 * 4
+        ag = 256 * 64 * 4
+        # all-reduce inside the while body runs 7x; ring factor 2
+        assert stats.by_type["all-reduce"] == 7 * ar
+        assert stats.by_type["all-gather"] == ag
+        assert stats.wire_bytes == 7 * ar * 2.0 + ag
+        assert stats.count == 2
+
+
+class TestRealModules:
+    def test_matmul_flops(self):
+        f = jax.jit(lambda a, b: a @ b)
+        low = f.lower(jax.ShapeDtypeStruct((64, 32), jnp.float32),
+                      jax.ShapeDtypeStruct((32, 16), jnp.float32))
+        st = analyze_module(low.compile().as_text())
+        assert st.flops == 2 * 64 * 16 * 32
+
+    def test_scan_flops_multiplied(self):
+        def f(x, w):
+            def body(c, _):
+                return c @ w, None
+            out, _ = jax.lax.scan(body, x, None, length=5)
+            return out
+
+        low = jax.jit(f).lower(jax.ShapeDtypeStruct((8, 8), jnp.float32),
+                               jax.ShapeDtypeStruct((8, 8), jnp.float32))
+        st = analyze_module(low.compile().as_text(),
+                            scan_trip_hints={"while": 5})
+        assert st.flops == 5 * 2 * 8 * 8 * 8
+
+    def test_no_collectives_single_device(self):
+        f = jax.jit(lambda a: a * 2)
+        low = f.lower(jax.ShapeDtypeStruct((16,), jnp.float32))
+        st = analyze_module(low.compile().as_text())
+        assert st.collectives.count == 0

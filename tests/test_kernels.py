@@ -1,0 +1,128 @@
+"""Per-kernel allclose vs ref.py oracles + hypothesis shape/dtype sweeps.
+
+Kernels run in interpret mode (CPU container; TPU is the target)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+class TestKNNKernel:
+    @given(n=st.integers(1, 700), d=st.integers(1, 40), seed=st.integers(0, 99))
+    @settings(max_examples=20, deadline=None)
+    def test_distances_match_ref(self, n, d, seed):
+        rng = np.random.default_rng(seed)
+        cases = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+        q = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+        k = min(5, n)
+        dist, idx = ops.knn_topk(cases, q, k)
+        dist_r, idx_r = ref.knn_topk_ref(cases, q, k)
+        np.testing.assert_allclose(np.asarray(dist), np.asarray(dist_r),
+                                   rtol=1e-5, atol=1e-5)
+        # indices may tie-swap; distances must agree and indices be valid
+        d2 = np.sum((np.asarray(cases) - np.asarray(q)) ** 2, axis=1)
+        np.testing.assert_allclose(np.sort(d2)[:k], np.sort(np.asarray(dist) ** 2),
+                                   rtol=1e-4, atol=1e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        rng = np.random.default_rng(0)
+        cases = jnp.asarray(rng.normal(size=(300, 11)), dtype)
+        q = jnp.asarray(rng.normal(size=(11,)), dtype)
+        dist, idx = ops.knn_topk(cases, q, 5)
+        dist_r, _ = ref.knn_topk_ref(cases.astype(jnp.float32),
+                                     q.astype(jnp.float32), 5)
+        np.testing.assert_allclose(np.asarray(dist), np.asarray(dist_r),
+                                   rtol=3e-2, atol=3e-2)
+
+
+class TestScoreKernel:
+    @given(j=st.integers(1, 600), t=st.integers(1, 300), seed=st.integers(0, 99))
+    @settings(max_examples=20, deadline=None)
+    def test_matches_ref(self, j, t, seed):
+        rng = np.random.default_rng(seed)
+        marg = jnp.asarray(rng.uniform(0, 1, j), jnp.float32)
+        ci = jnp.asarray(rng.uniform(20, 600, t), jnp.float32)
+        ts = jnp.asarray(rng.integers(0, t, j), jnp.int32)
+        te = jnp.asarray(rng.integers(0, t + 5, j), jnp.int32)
+        out = ops.score_matrix(marg, ci, ts, te)
+        expect = ref.score_matrix_ref(marg, ci, ts, te)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-6, atol=1e-7)
+
+    def test_window_mask_exact(self):
+        out = ops.score_matrix(jnp.ones(1), jnp.ones(6),
+                               jnp.asarray([2]), jnp.asarray([4]))
+        np.testing.assert_array_equal(np.asarray(out)[0],
+                                      [0, 0, 1, 1, 0, 0])
+
+
+class TestFlashAttentionKernel:
+    @given(
+        sq=st.sampled_from([1, 17, 64, 130]),
+        sk_extra=st.integers(0, 200),
+        hq=st.sampled_from([2, 4, 8]),
+        group=st.sampled_from([1, 2, 4]),
+        d=st.sampled_from([32, 64, 128]),
+        seed=st.integers(0, 50),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_matches_ref(self, sq, sk_extra, hq, group, d, seed):
+        if hq % group:
+            group = 1
+        hkv = hq // group
+        sk = sq + sk_extra
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.normal(size=(2, sq, hq, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(2, sk, hkv, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(2, sk, hkv, d)), jnp.float32)
+        off = sk - sq
+        out = ops.flash_attention(q, k, v, causal_offset=off,
+                                  block_q=64, block_k=64)
+        expect = ref.flash_attention_ref(q, k, v, causal_offset=off)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_bf16(self):
+        rng = np.random.default_rng(3)
+        q = jnp.asarray(rng.normal(size=(1, 64, 4, 64)), jnp.bfloat16)
+        k = jnp.asarray(rng.normal(size=(1, 64, 2, 64)), jnp.bfloat16)
+        v = jnp.asarray(rng.normal(size=(1, 64, 2, 64)), jnp.bfloat16)
+        out = ops.flash_attention(q, k, v)
+        expect = ref.flash_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(expect, np.float32),
+                                   rtol=5e-2, atol=5e-2)
+
+    def test_block_shape_sweep(self):
+        rng = np.random.default_rng(4)
+        q = jnp.asarray(rng.normal(size=(1, 96, 4, 64)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, 96, 4, 64)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(1, 96, 4, 64)), jnp.float32)
+        expect = ref.flash_attention_ref(q, k, v)
+        for bq, bk in [(32, 32), (64, 128), (128, 32)]:
+            out = ops.flash_attention(q, k, v, block_q=bq, block_k=bk)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                       rtol=2e-5, atol=2e-5)
+
+
+class TestKernelIntegration:
+    def test_kb_pallas_backend_matches_jax(self):
+        from repro.core.knowledge import KnowledgeBase
+
+        rng = np.random.default_rng(0)
+        states = np.abs(rng.normal(size=(60, 11)))
+        m_vals = rng.integers(0, 100, 60)
+        rho_vals = rng.uniform(0, 1, 60)
+        kbs = {}
+        for backend in ("jax", "pallas"):
+            kb = KnowledgeBase(backend=backend)
+            kb.add_window(states, m_vals, rho_vals)
+            kbs[backend] = kb.query(states[10] + 0.02, k=4)
+        np.testing.assert_allclose(kbs["jax"][2], kbs["pallas"][2], rtol=1e-4)
+        np.testing.assert_allclose(np.sort(kbs["jax"][0]),
+                                   np.sort(kbs["pallas"][0]), rtol=1e-5)

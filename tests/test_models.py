@@ -1,0 +1,156 @@
+"""Per-arch smoke tests (reduced configs) + model-substrate unit tests.
+
+Each assigned architecture instantiates a REDUCED config of the same
+family and runs one forward/train step on CPU, asserting output shapes and
+no NaNs (full configs are exercised only via the dry-run).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, reduced
+from repro.models import LogicalRules, forward, init_params
+from repro.models.common import chunked_attention
+from repro.models.ssm import chunked_linear_attention, reference_scan
+from repro.serve import init_cache, make_serve_step
+from repro.train import OptimizerConfig, init_state, lr_at, make_train_step
+
+
+@pytest.fixture(scope="module")
+def rules():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return LogicalRules(mesh)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_train_step(arch, rules):
+    cfg = reduced(ARCHS[arch])
+    state = init_state(cfg, jax.random.key(0))
+    step = make_train_step(cfg, rules, OptimizerConfig(total_steps=4), ce_chunk=16)
+    B, S = 2, 32
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+    if cfg.prefix_len:
+        batch["prefix_embeds"] = jnp.asarray(
+            rng.normal(0, 0.02, (B, cfg.prefix_len, cfg.d_model)), jnp.float32)
+    new_state, metrics = jax.jit(step)(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert int(new_state.step) == 1
+    # params actually moved
+    delta = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda p, q: float(jnp.abs(p - q).sum()),
+                     state.params, new_state.params))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_forward_shapes(arch, rules):
+    cfg = reduced(ARCHS[arch])
+    params = init_params(cfg, jax.random.key(1))
+    B, S = 2, 16
+    toks = jnp.zeros((B, S), jnp.int32)
+    kw = {}
+    if cfg.prefix_len:
+        kw["prefix_embeds"] = jnp.zeros((B, cfg.prefix_len, cfg.d_model), jnp.float32)
+    logits = forward(params, toks, cfg, rules, **kw)
+    assert logits.shape == (B, S + cfg.prefix_len, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "qwen3-moe-235b-a22b",
+                                  "rwkv6-7b", "zamba2-7b"])
+def test_decode_matches_forward(arch, rules):
+    cfg = reduced(ARCHS[arch])
+    if cfg.num_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)  # no token drops
+    params = init_params(cfg, jax.random.key(0))
+    B, S = 2, 12
+    cache = init_cache(cfg, B, 16)
+    step = jax.jit(make_serve_step(cfg, rules))
+    toks = jnp.asarray(np.random.default_rng(1).integers(
+        0, cfg.vocab_size, (B, S)), jnp.int32)
+    for t in range(S):
+        logits_dec, cache = step(params, cache, toks[:, t])
+    logits_full = forward(params, toks, cfg, rules)
+    np.testing.assert_allclose(np.asarray(logits_dec),
+                               np.asarray(logits_full[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+class TestChunkedAttention:
+    def _naive(self, q, k, v, offset):
+        b, sq, hq, d = q.shape
+        hkv = k.shape[2]
+        qg = q.reshape(b, sq, hkv, hq // hkv, d)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                       k.astype(jnp.float32)) / np.sqrt(d)
+        qpos = offset + jnp.arange(sq)
+        kpos = jnp.arange(k.shape[1])
+        mask = qpos[:, None] >= kpos[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+        return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, d)
+
+    @given(sq=st.integers(1, 9), sk=st.integers(1, 33), chunk=st.integers(2, 16),
+           seed=st.integers(0, 100))
+    @settings(max_examples=25, deadline=None)
+    def test_matches_naive(self, sq, sk, chunk, seed):
+        if sq > sk:
+            sq = sk
+        rng = np.random.default_rng(seed)
+        b, hq, hkv, d = 2, 4, 2, 8
+        q = jnp.asarray(rng.normal(size=(b, sq, hq, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, sk, hkv, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, sk, hkv, d)), jnp.float32)
+        offset = sk - sq
+        out = chunked_attention(q, k, v, offset, chunk)
+        ref = self._naive(q, k, v, offset)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
+class TestLinearRecurrence:
+    @given(s=st.integers(1, 40), chunk=st.sampled_from([4, 8, 16]),
+           rwkv=st.booleans(), seed=st.integers(0, 50))
+    @settings(max_examples=20, deadline=None)
+    def test_chunked_matches_sequential(self, s, chunk, rwkv, seed):
+        rng = np.random.default_rng(seed)
+        b, h, dk, dv = 2, 2, 4, 4
+        q = jnp.asarray(rng.normal(size=(b, s, h, dk)), jnp.float32) * 0.5
+        k = jnp.asarray(rng.normal(size=(b, s, h, dk)), jnp.float32) * 0.5
+        v = jnp.asarray(rng.normal(size=(b, s, h, dv)), jnp.float32) * 0.5
+        logw = -jnp.asarray(rng.uniform(0.01, 1.5, (b, s, h, dk)), jnp.float32)
+        u = jnp.asarray(rng.normal(size=(h, dk)), jnp.float32) * 0.5 if rwkv else None
+        y1, s1 = chunked_linear_attention(q, k, v, logw, u=u, chunk=chunk,
+                                          return_state=True)
+        y2, s2 = reference_scan(q, k, v, logw, u=u)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestSchedules:
+    def test_wsd_shape(self):
+        opt = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                              schedule="wsd", wsd_stable_frac=0.8)
+        lrs = np.array([float(lr_at(jnp.int32(s), opt)) for s in range(100)])
+        assert lrs[0] <= 0.2
+        assert abs(lrs[10] - 1.0) < 1e-6        # after warmup: peak
+        assert abs(lrs[79] - 1.0) < 1e-6        # stable phase holds peak
+        assert lrs[99] < 0.15                   # decayed to ~10%
+        assert (np.diff(lrs[80:]) <= 1e-9).all()
+
+    def test_cosine_monotone_decay(self):
+        opt = OptimizerConfig(lr=1.0, warmup_steps=5, total_steps=50)
+        lrs = np.array([float(lr_at(jnp.int32(s), opt)) for s in range(50)])
+        assert (np.diff(lrs[5:]) <= 1e-9).all()

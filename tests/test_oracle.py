@@ -1,0 +1,133 @@
+"""Algorithm 1 (offline oracle) unit + property tests."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import oracle
+from repro.core.profiles import amdahl_profile
+from repro.core.types import Job
+
+
+def mk_job(jid, arrival, length, delay, k_max=3, sigma=0.5, k_min=1):
+    return Job(job_id=jid, arrival=arrival, length=length, queue=0, delay=delay,
+               profile=amdahl_profile(k_min, k_max, sigma), k_min=k_min)
+
+
+def brute_force_min_carbon(jobs, ci, capacity, horizon):
+    """Exhaustive minimum-carbon feasible schedule (tiny instances only)."""
+    per_job_options = []
+    for job in jobs:
+        slots = [t for t in range(horizon) if job.arrival <= t <= job.deadline]
+        choices = []
+        for ks in itertools.product(range(job.k_max + 1), repeat=len(slots)):
+            if any(0 < k < job.k_min for k in ks):
+                continue
+            work = sum(job.throughput(k) for k in ks)
+            if work >= job.length - 1e-9:
+                choices.append(dict(zip(slots, ks)))
+        per_job_options.append(choices)
+    best = np.inf
+    for combo in itertools.product(*per_job_options):
+        used = np.zeros(horizon)
+        for alloc in combo:
+            for t, k in alloc.items():
+                used[t] += k
+        if (used <= capacity).all():
+            cost = float(np.sum(used * ci[:horizon]))
+            best = min(best, cost)
+    return best
+
+
+class TestOracleOptimality:
+    def test_matches_brute_force_small(self):
+        ci = np.array([1.0, 5.0, 2.0, 10.0, 1.5])
+        jobs = [mk_job(0, 0, 2.0, 2, k_max=2), mk_job(1, 1, 1.0, 2, k_max=2)]
+        res = oracle.solve(jobs, ci, capacity=3, backend="numpy")
+        assert res.schedule.feasible
+        got = float(np.sum(res.capacity_curve * ci[: len(res.capacity_curve)]))
+        best = brute_force_min_carbon(jobs, ci, 3, 5)
+        assert got <= best + 1e-6
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_near_brute_force_random(self, seed):
+        rng = np.random.default_rng(seed)
+        horizon = 5
+        ci = rng.uniform(1, 10, horizon)
+        jobs = [
+            mk_job(0, 0, float(rng.integers(1, 3)), 2, k_max=2, sigma=0.6),
+            mk_job(1, int(rng.integers(0, 2)), 1.0, 2, k_max=2, sigma=0.6),
+        ]
+        res = oracle.solve(jobs, ci, capacity=2, backend="numpy")
+        got = float(np.sum(res.capacity_curve * ci))
+        best = brute_force_min_carbon(jobs, ci, 2, horizon)
+        if np.isfinite(best):
+            # greedy is provably optimal under Thm 4.1 conditions; integral
+            # throughput rounding can cost at most one increment
+            assert got <= best * 1.10 + 1e-6
+
+
+class TestOracleInvariants:
+    @given(
+        n=st.integers(1, 6),
+        cap=st.integers(1, 8),
+        seed=st.integers(0, 10_000),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_capacity_and_window(self, n, cap, seed):
+        rng = np.random.default_rng(seed)
+        horizon = 24
+        ci = rng.uniform(50, 500, horizon)
+        jobs = [
+            mk_job(i, int(rng.integers(0, 12)), float(rng.uniform(1, 4)),
+                   int(rng.integers(0, 8)), k_max=int(rng.integers(1, 4)))
+            for i in range(n)
+        ]
+        res = oracle.solve(jobs, ci, capacity=cap, backend="numpy")
+        alloc = res.schedule.alloc
+        assert (alloc.sum(axis=0) <= cap).all()
+        for i, job in enumerate(res.schedule.jobs):
+            nz = np.nonzero(alloc[i])[0]
+            if len(nz):
+                assert nz.min() >= job.arrival
+                assert nz.max() <= job.deadline
+                assert alloc[i].max() <= job.k_max
+                assert alloc[i][nz].min() >= job.k_min
+
+    @given(seed=st.integers(0, 10_000))
+    @settings(max_examples=15, deadline=None)
+    def test_jax_matches_numpy(self, seed):
+        rng = np.random.default_rng(seed)
+        horizon = 16
+        ci = rng.uniform(50, 500, horizon)
+        jobs = [
+            mk_job(i, int(rng.integers(0, 8)), float(rng.uniform(1, 3)),
+                   int(rng.integers(0, 6)), k_max=3)
+            for i in range(4)
+        ]
+        r_np = oracle.solve(jobs, ci, capacity=5, backend="numpy")
+        r_jx = oracle.solve(jobs, ci, capacity=5, backend="jax")
+        np.testing.assert_array_equal(r_np.schedule.alloc, r_jx.schedule.alloc)
+        np.testing.assert_array_equal(r_np.capacity_curve, r_jx.capacity_curve)
+
+    def test_infeasible_extends_deadlines(self):
+        ci = np.ones(40)
+        # 3 jobs of length 10 on capacity 1, delay 0 -> must extend
+        jobs = [mk_job(i, 0, 10.0, 0, k_max=1) for i in range(3)]
+        res = oracle.solve(jobs, ci, capacity=1, backend="numpy")
+        assert res.schedule.feasible
+        assert res.schedule.extended.sum() > 0
+
+    def test_rho_curve_default_one(self):
+        ci = np.ones(8)
+        res = oracle.solve([], ci, capacity=4, backend="numpy")
+        assert (res.rho_curve == 1.0).all()
+
+    def test_prefers_low_carbon_slots(self):
+        ci = np.array([10.0, 1.0, 10.0, 1.0, 10.0, 1.0])
+        job = mk_job(0, 0, 2.0, 4, k_max=1)
+        res = oracle.solve([job], ci, capacity=1, backend="numpy")
+        alloc = res.schedule.alloc[0]
+        assert alloc[1] == 1 and alloc[3] == 1
+        assert alloc[[0, 2, 4]].sum() == 0

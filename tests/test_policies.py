@@ -1,0 +1,78 @@
+"""End-to-end policy tests: learning + execution phases (small scale)."""
+import numpy as np
+import pytest
+
+from repro.core import (CarbonFlexPolicy, CarbonService, ClusterConfig,
+                        KnowledgeBase, OraclePolicy, baselines, learn_window,
+                        simulate)
+from repro.core.policy import CarbonFlexMPCPolicy
+from repro.traces import TraceSpec, generate_trace, mean_length
+
+CAP = 30
+WEEK = 24 * 7
+
+
+@pytest.fixture(scope="module")
+def world():
+    cluster = ClusterConfig.default(capacity=CAP)
+    ci = CarbonService.synthetic("south-australia", WEEK * 4 + 24 * 30, seed=11)
+    spec = TraceSpec(family="azure", hours=WEEK * 3, capacity=CAP, seed=12)
+    jobs = generate_trace(spec, cluster.queues)
+    eval_jobs = [j for j in jobs if WEEK * 2 <= j.arrival < WEEK * 3]
+    hist_jobs = [j for j in jobs if j.arrival < WEEK * 2]
+    base = simulate(eval_jobs, ci, cluster, baselines.CarbonAgnosticPolicy(),
+                    t0=WEEK * 2, horizon=WEEK)
+    return cluster, ci, spec, jobs, hist_jobs, eval_jobs, base
+
+
+def test_oracle_beats_agnostic(world):
+    cluster, ci, spec, jobs, hist, ev, base = world
+    r = simulate(ev, ci, cluster, OraclePolicy(backend="numpy"),
+                 t0=WEEK * 2, horizon=WEEK)
+    assert r.savings_vs(base) > 20.0
+    assert r.violation_rate <= 0.02
+
+
+def test_carbonflex_knn_pipeline(world):
+    cluster, ci, spec, jobs, hist, ev, base = world
+    kb = KnowledgeBase()
+    learn_window(kb, hist, ci, 0, WEEK, CAP, 3, offsets=(0, WEEK), backend="numpy")
+    assert len(kb) == 2 * WEEK
+    r = simulate(ev, ci, cluster, CarbonFlexPolicy(kb), t0=WEEK * 2, horizon=WEEK)
+    # learned policy must clearly beat carbon-agnostic
+    assert r.savings_vs(base) > 5.0
+    assert (r.completion >= 0).all()
+
+
+def test_carbonflex_mpc_close_to_oracle(world):
+    cluster, ci, spec, jobs, hist, ev, base = world
+    orc = simulate(ev, ci, cluster, OraclePolicy(backend="numpy"),
+                   t0=WEEK * 2, horizon=WEEK)
+    pol = CarbonFlexMPCPolicy()
+    pol.warm_start(hist)
+    r = simulate(ev, ci, cluster, pol, t0=WEEK * 2, horizon=WEEK)
+    assert r.savings_vs(base) > 0.6 * orc.savings_vs(base)
+
+
+def test_baselines_ordering(world):
+    """Qualitative ordering from the paper: elastic/carbon-aware policies
+    save carbon vs agnostic; oracle dominates."""
+    cluster, ci, spec, jobs, hist, ev, base = world
+    ml = mean_length(TraceSpec(family="azure"))
+    savings = {}
+    for pol in [baselines.WaitAwhilePolicy(), baselines.GaiaPolicy(mean_length=ml),
+                baselines.CarbonScalerPolicy(mean_length=ml)]:
+        r = simulate(ev, ci, cluster, pol, t0=WEEK * 2, horizon=WEEK)
+        savings[pol.name] = r.savings_vs(base)
+    for name, s in savings.items():
+        assert s > 0.0, (name, s)
+
+
+def test_vcc_interop(world):
+    cluster, ci, spec, jobs, hist, ev, base = world
+    plain = simulate(ev, ci, cluster, baselines.VCCPolicy(), t0=WEEK * 2, horizon=WEEK)
+    scal = simulate(ev, ci, cluster, baselines.VCCPolicy(scaling=True),
+                    t0=WEEK * 2, horizon=WEEK)
+    assert plain.carbon_g > 0 and scal.carbon_g > 0
+    # §6.7: adding elastic scaling to VCC lowers waiting time
+    assert scal.mean_wait <= plain.mean_wait + 1.0

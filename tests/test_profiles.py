@@ -1,0 +1,72 @@
+"""Scaling-profile tests: parametric family + roofline derivation."""
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.profiles import (RooflineTerms, amdahl_profile, class_profile,
+                                 elasticity_of, roofline_profile)
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun_opt")
+
+
+class TestParametricProfiles:
+    @given(sigma=st.floats(0.01, 2.0), k_max=st.integers(2, 32))
+    @settings(max_examples=30, deadline=None)
+    def test_monotone_decreasing_and_normalised(self, sigma, k_max):
+        p = amdahl_profile(1, k_max, sigma)
+        assert abs(p[0] - 1.0) < 1e-12
+        assert (np.diff(p) <= 1e-12).all()
+        assert (p >= 0).all()
+
+    def test_class_ordering(self):
+        hi = elasticity_of(class_profile("high"))
+        mo = elasticity_of(class_profile("moderate"))
+        lo = elasticity_of(class_profile("low"))
+        assert hi > mo > lo
+
+
+class TestRooflineProfiles:
+    def _terms(self, flops=1e14, grad=1e9):
+        return RooflineTerms(flops=flops, hbm_bytes=flops / 100,
+                             grad_bytes=grad)
+
+    def test_monotone_decreasing(self):
+        p = roofline_profile(self._terms())
+        assert abs(p[0] - 1.0) < 1e-12
+        assert (np.diff(p) <= 1e-12).all()
+
+    def test_more_compute_per_sync_is_more_elastic(self):
+        small = roofline_profile(self._terms(flops=1e13))
+        big = roofline_profile(self._terms(flops=1e15))
+        assert elasticity_of(big) > elasticity_of(small)
+
+    def test_step_time_components(self):
+        t = self._terms()
+        assert t.step_time(1) > t.step_time(16)        # strong scaling helps
+        # collective term appears only at k > 1
+        t2 = RooflineTerms(flops=1e10, hbm_bytes=1e8, grad_bytes=1e12)
+        assert t2.step_time(2) > t2.step_time(1)       # sync dominates
+
+
+@pytest.mark.skipif(not os.path.isdir(RESULTS),
+                    reason="dry-run results not present")
+class TestFromDryrun:
+    def test_profiles_from_cells(self):
+        from repro.core.profiles import profile_from_dryrun
+
+        for arch in ["llama3-8b", "command-r-plus-104b"]:
+            p = profile_from_dryrun(arch, dryrun_dir=RESULTS)
+            assert abs(p[0] - 1.0) < 1e-12
+            assert (np.diff(p) <= 1e-12).all()
+            assert 0.3 < elasticity_of(p) <= 1.0
+
+    def test_tpu_trace_mode(self):
+        from repro.traces import TraceSpec, generate_trace
+
+        jobs = generate_trace(TraceSpec(hours=24, seed=0, elasticity="tpu"))
+        archs = {j.arch for j in jobs}
+        assert len(archs) >= 3            # mixes the assigned architectures
+        for j in jobs[:50]:
+            assert (np.diff(j.profile) <= 1e-9).all()

@@ -1,0 +1,151 @@
+"""Algorithm 3 (psi) + provisioning (phi) + knowledge-base tests."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.knowledge import KnowledgeBase, build_state, relative_backlog
+from repro.core.profiles import amdahl_profile
+from repro.core.provisioning import ProvisioningConfig, provision
+from repro.core.scheduling import ActiveJob, apply_slot, schedule
+from repro.core.types import Job
+
+
+def mk_active(jid, k_max=4, sigma=0.5, remaining=3.0, slack=5, queue=0):
+    job = Job(job_id=jid, arrival=0, length=remaining, queue=queue, delay=slack,
+              profile=amdahl_profile(1, k_max, sigma))
+    return ActiveJob(job=job, remaining=remaining, slack_left=slack)
+
+
+class TestSchedule:
+    def test_respects_capacity(self):
+        active = [mk_active(i) for i in range(10)]
+        alloc = schedule(active, m_t=4, rho=0.0)
+        assert sum(alloc.values()) <= 4
+
+    def test_base_before_scaling(self):
+        active = [mk_active(i) for i in range(3)]
+        alloc = schedule(active, m_t=5, rho=0.0, fill_spare=True)
+        # all 3 jobs must hold k_min before anyone scales
+        assert len(alloc) == 3
+        assert sorted(alloc.values(), reverse=True)[0] <= 3
+
+    def test_rho_blocks_scaling(self):
+        active = [mk_active(0, sigma=0.9)]
+        alloc = schedule(active, m_t=4, rho=0.9)
+        # marginals above k=1 are < 0.9 for sigma=0.9
+        assert alloc[0] == 1
+
+    def test_forced_jobs_bypass_rho(self):
+        a = mk_active(0, slack=0)
+        alloc = schedule([a], m_t=4, rho=2.0)   # rho excludes everything
+        assert alloc[0] == a.job.k_min
+
+    def test_forced_ordering_by_slack(self):
+        a0 = mk_active(0, slack=0)
+        a1 = mk_active(1, slack=-3)
+        alloc = schedule([a0, a1], m_t=1, rho=2.0)
+        assert alloc == {1: 1}
+
+    @given(
+        n=st.integers(1, 8),
+        m=st.integers(0, 20),
+        rho=st.floats(0.0, 1.2),
+        seed=st.integers(0, 1000),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_invariants(self, n, m, rho, seed):
+        rng = np.random.default_rng(seed)
+        active = [
+            mk_active(i, k_max=int(rng.integers(1, 6)),
+                      sigma=float(rng.uniform(0.1, 1.0)),
+                      slack=int(rng.integers(-2, 10)))
+            for i in range(n)
+        ]
+        alloc = schedule(active, m_t=m, rho=rho)
+        assert sum(alloc.values()) <= max(m, 0)
+        by_id = {a.job.job_id: a for a in active}
+        for jid, k in alloc.items():
+            assert by_id[jid].job.k_min <= k <= by_id[jid].job.k_max
+
+    def test_apply_slot_progress_and_waiting(self):
+        a = mk_active(0, remaining=2.0)
+        b = mk_active(1, remaining=2.0, slack=3)
+        apply_slot([a, b], {0: 1})
+        assert a.remaining == 1.0 and a.started
+        assert b.slack_left == 2 and b.waited == 1
+
+
+class TestKnowledgeBase:
+    def _mk_kb(self, n=50, seed=0, **kw):
+        rng = np.random.default_rng(seed)
+        states = rng.normal(size=(n, 11))  # 3 CI + 2 ratio + 3 q + 3 arr... layout-free
+        states = np.abs(states)
+        kb = KnowledgeBase(**kw)
+        kb.add_window(states, rng.integers(0, 100, n), rng.uniform(0, 1, n))
+        return kb, states
+
+    def test_exact_match_distance_zero(self):
+        kb, states = self._mk_kb()
+        m, rho, d = kb.query(states[7], k=1)
+        assert d[0] < 1e-6
+
+    def test_query_k_items_sorted(self):
+        kb, states = self._mk_kb()
+        m, rho, d = kb.query(states[0] + 0.01, k=5)
+        assert len(m) == len(rho) == len(d) == 5
+        assert (np.diff(d) >= -1e-12).all()
+
+    def test_aging_drops_old_windows(self):
+        kb = KnowledgeBase(max_windows=2)
+        for i in range(4):
+            kb.add_window(np.full((10, 11), float(i)), np.full(10, i), np.ones(10))
+        assert len(kb) == 20
+        m, _, _ = kb.query(np.full(11, 0.0), k=20)
+        assert set(np.unique(m)) == {2.0, 3.0}
+
+    def test_backends_agree(self):
+        kb_j, states = self._mk_kb(backend="jax")
+        kb_n, _ = self._mk_kb(backend="numpy")
+        q = states[3] + 0.05
+        mj, rj, dj = kb_j.query(q, k=4)
+        mn, rn, dn = kb_n.query(q, k=4)
+        np.testing.assert_allclose(np.sort(dj), np.sort(dn), rtol=1e-5)
+        np.testing.assert_allclose(np.sort(mj), np.sort(mn), rtol=1e-6)
+
+    def test_relative_backlog(self):
+        r = relative_backlog(np.array([10.0, 10.0, 20.0]))
+        np.testing.assert_allclose(r, [1.0, 1.0, 1.5])
+
+
+class TestProvisioning:
+    def _kb(self):
+        kb = KnowledgeBase()
+        states = np.tile(np.arange(10, dtype=float)[:, None], (1, 11))
+        kb.add_window(states, np.arange(10) * 10.0, np.full(10, 0.5))
+        return kb
+
+    def test_mean_path(self):
+        kb = self._kb()
+        m, rho = provision(np.full(11, 2.0), kb, capacity=100, current_m=0,
+                           violation_rate=0.0)
+        assert 0 <= m <= 100
+        assert 0 <= rho <= 1.0
+
+    def test_violation_fallback_to_max_capacity(self):
+        kb = self._kb()
+        cfg = ProvisioningConfig(delta=0.0, epsilon=0.01)
+        m, rho = provision(np.full(11, 100.0), kb, capacity=77, current_m=5,
+                           violation_rate=0.5, cfg=cfg)
+        assert m == 77 and rho == 1.0
+
+    def test_violation_conservative_max(self):
+        kb = self._kb()
+        cfg = ProvisioningConfig(delta=1e9, epsilon=0.01)
+        m, rho = provision(np.full(11, 2.0), kb, capacity=100, current_m=33,
+                           violation_rate=0.5, cfg=cfg)
+        assert m >= 33
+
+    def test_min_required_floor(self):
+        kb = self._kb()
+        m, _ = provision(np.full(11, 0.0), kb, capacity=100, current_m=0,
+                         violation_rate=0.0, min_required=42)
+        assert m >= 42

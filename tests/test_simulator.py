@@ -1,0 +1,119 @@
+"""CarbonFlex-Simulator engine + emissions accounting tests."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baselines, emissions, simulate
+from repro.core.carbon import CarbonService, REGIONS, synthesize_trace
+from repro.core.profiles import amdahl_profile
+from repro.core.types import ClusterConfig, Job
+
+
+def mk_jobs(n, seed=0, hours=48, k_max=3):
+    rng = np.random.default_rng(seed)
+    cluster = ClusterConfig.default(capacity=10)
+    jobs = []
+    for i in range(n):
+        length = float(rng.uniform(1, 4))
+        q = 0 if length <= 2 else 1
+        jobs.append(Job(job_id=i, arrival=int(rng.integers(0, hours // 2)),
+                        length=length, queue=q, delay=cluster.queues[q].delay,
+                        profile=amdahl_profile(1, k_max, 0.5)))
+    return jobs, cluster
+
+
+class TestCarbonService:
+    def test_deterministic_under_seed(self):
+        a = synthesize_trace("california", 100, seed=7)
+        b = synthesize_trace("california", 100, seed=7)
+        np.testing.assert_array_equal(a, b)
+
+    def test_regions_calibration(self):
+        for region, (mean, cov) in REGIONS.items():
+            tr = synthesize_trace(region, 24 * 90, seed=3)
+            assert abs(tr.mean() - mean) / mean < 0.25, region
+            assert tr.min() >= 10.0
+
+    def test_rank_in_unit_interval(self):
+        svc = CarbonService.synthetic("germany", 24 * 7)
+        ranks = [svc.rank(t) for t in range(24 * 6)]
+        assert min(ranks) >= 0.0 and max(ranks) <= 1.0
+
+    def test_forecast_padding_and_extension(self):
+        svc = CarbonService.synthetic("texas", 48)
+        assert len(svc.forecast(40)) == 24
+        assert len(svc.forecast_extended(0, 72)) == 72
+
+
+class TestEmissions:
+    def test_zero_when_idle(self):
+        cluster = ClusterConfig.default(10)
+        job = Job(0, 0, 1.0, 0, 6, np.ones(1))
+        assert emissions.slot_energy_kwh(job, 0, cluster) == 0.0
+
+    def test_scales_with_k_and_frac(self):
+        cluster = ClusterConfig.default(10)
+        job = Job(0, 0, 1.0, 0, 6, np.ones(4), power=2.0)
+        e1 = emissions.slot_energy_kwh(job, 1, cluster)
+        e4 = emissions.slot_energy_kwh(job, 4, cluster)
+        assert e4 > e1 * 3.9
+        assert emissions.slot_energy_kwh(job, 1, cluster, frac=0.5) == e1 * 0.5
+
+    def test_network_term_positive_for_distributed(self):
+        cluster = ClusterConfig.default(10)
+        job = Job(0, 0, 1.0, 0, 6, np.ones(4), comm_size=10.0)
+        base = emissions.slot_energy_kwh(job, 1, cluster)
+        dist = emissions.slot_energy_kwh(job, 2, cluster)
+        assert dist > 2 * base  # ring all-reduce traffic appears at k>1
+
+
+class TestSimulator:
+    def test_all_jobs_complete(self):
+        jobs, cluster = mk_jobs(12)
+        ci = CarbonService.synthetic("ontario", 24 * 30)
+        res = simulate(jobs, ci, cluster, baselines.CarbonAgnosticPolicy(),
+                       horizon=48)
+        assert (res.completion >= 0).all()
+        assert res.carbon_g > 0 and res.energy_kwh > 0
+
+    def test_agnostic_runs_immediately(self):
+        jobs, cluster = mk_jobs(3)
+        ci = CarbonService.synthetic("ontario", 24 * 30)
+        res = simulate(jobs, ci, cluster, baselines.CarbonAgnosticPolicy(),
+                       horizon=48)
+        assert res.mean_wait == 0.0
+        assert not res.violations.any()
+
+    @given(seed=st.integers(0, 500))
+    @settings(max_examples=10, deadline=None)
+    def test_capacity_invariant_under_policies(self, seed):
+        jobs, cluster = mk_jobs(15, seed=seed)
+        ci = CarbonService.synthetic("germany", 24 * 30, seed=seed)
+        for pol in [baselines.WaitAwhilePolicy(), baselines.GaiaPolicy(mean_length=2.5),
+                    baselines.VCCPolicy(), baselines.VCCPolicy(scaling=True)]:
+            res = simulate(jobs, ci, cluster, pol, horizon=48)
+            for log in res.slots:
+                assert log.used <= cluster.capacity
+            assert (res.completion >= 0).all(), pol.name
+
+    def test_capacity_enforcement_trims_policy_overcommit(self):
+        jobs, cluster = mk_jobs(20, seed=1)
+        ci = CarbonService.synthetic("ontario", 24 * 30)
+
+        class Greedy:
+            name = "greedy"
+            def on_window_start(self, *a): pass
+            def decide(self, t, active, ci, cluster):
+                return cluster.capacity, {a.job.job_id: a.job.k_max
+                                          for a in active if not a.done}
+            def on_completion(self, *a): pass
+
+        res = simulate(jobs, ci, cluster, Greedy(), horizon=48)
+        for log in res.slots:
+            assert log.used <= cluster.capacity
+
+    def test_wait_awhile_runs_in_cleanest_slots(self):
+        jobs, cluster = mk_jobs(5, seed=2)
+        ci = CarbonService.synthetic("south-australia", 24 * 30, seed=5)
+        res_wa = simulate(jobs, ci, cluster, baselines.WaitAwhilePolicy(), horizon=48)
+        res_ag = simulate(jobs, ci, cluster, baselines.CarbonAgnosticPolicy(), horizon=48)
+        assert res_wa.carbon_g <= res_ag.carbon_g * 1.02

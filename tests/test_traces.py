@@ -1,0 +1,57 @@
+"""Workload trace generator properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.types import ClusterConfig
+from repro.traces import TraceSpec, generate_trace, mean_length
+
+
+class TestTraces:
+    def test_deterministic(self):
+        spec = TraceSpec(hours=24 * 7, seed=3)
+        a = generate_trace(spec)
+        b = generate_trace(spec)
+        assert len(a) == len(b)
+        assert all(x.arrival == y.arrival and x.length == y.length
+                   for x, y in zip(a, b))
+
+    @given(family=st.sampled_from(["azure", "alibaba", "surf"]),
+           util=st.floats(0.25, 0.9), seed=st.integers(0, 50))
+    @settings(max_examples=15, deadline=None)
+    def test_utilization_calibration(self, family, util, seed):
+        cap = 100
+        spec = TraceSpec(family=family, hours=24 * 28, capacity=cap,
+                         utilization=util, seed=seed)
+        jobs = generate_trace(spec)
+        demand = sum(j.length * j.k_min for j in jobs)
+        implied = demand / (24 * 28 * cap)
+        assert abs(implied - util) / util < 0.35
+
+    def test_queue_assignment_consistent(self):
+        queues = ClusterConfig.default(50).queues
+        for j in generate_trace(TraceSpec(hours=24 * 7, seed=1), queues):
+            q = queues[j.queue]
+            assert j.length <= q.max_length
+            assert j.delay == q.delay
+            if j.queue > 0:
+                assert j.length > queues[j.queue - 1].max_length
+
+    def test_profiles_monotone_decreasing(self):
+        for j in generate_trace(TraceSpec(hours=24 * 3, seed=2))[:100]:
+            assert (np.diff(j.profile) <= 1e-9).all()
+            assert abs(j.profile[0] - 1.0) < 1e-9
+
+    def test_hour_plus_jobs_only(self):
+        jobs = generate_trace(TraceSpec(hours=24 * 7, seed=4))
+        assert min(j.length for j in jobs) >= 1.0
+
+    def test_shift_knobs(self):
+        base = generate_trace(TraceSpec(hours=24 * 14, seed=5))
+        longer = generate_trace(TraceSpec(hours=24 * 14, seed=5,
+                                          length_scale=1.5))
+        assert (np.mean([j.length for j in longer])
+                > np.mean([j.length for j in base]))
+
+    def test_gpu_mode_heterogeneous_power(self):
+        jobs = generate_trace(TraceSpec(hours=24 * 7, seed=6, mode="gpu"))
+        assert len({j.power for j in jobs}) > 1
