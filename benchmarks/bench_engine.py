@@ -1,0 +1,289 @@
+"""Engine micro-benchmark: ``PYTHONPATH=src python -m benchmarks.bench_engine``.
+
+Times the three hot paths of the learning/execution stack at CI scale
+(capacity 60, 3 learning weeks + 1 evaluation week — the same scale as the
+figure benchmarks) and emits ``BENCH_engine.json`` at the repo root so the
+perf trajectory is tracked across PRs:
+
+- ``simulate``      — scalar reference engine vs the vectorised engine;
+- ``kb_query``      — seed query config (re-z-score whole base + host->device
+                      transfer per call) vs the cached device-resident path,
+                      plus ``query_batch`` throughput;
+- ``oracle_solve``  — seed loop-based entry builder + reference greedy +
+                      unconditional retry loop vs the vectorised builder +
+                      early-exit greedy;
+- ``combined_learn_execute`` — the §6 pipeline (learning windows + one
+                      evaluation week of simulate with per-slot KB queries),
+                      seed configuration vs new.  This is the ISSUE-1
+                      acceptance metric (>= 10x).
+
+The seed configuration is reconstructed faithfully: the loop-based entry
+builder and the retry loop without the futile-extension early exit live in
+``_seed_*`` below (they were removed from the library), the greedy pass uses
+the kept ``backend="numpy-ref"`` reference, the simulator runs with
+``engine="scalar"``, and the knowledge base with ``cache=False`` plus the
+jax backend (per-query base re-normalisation + transfer) — exactly the seed
+defaults.  See EXPERIMENTS.md §Perf for methodology and recorded numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import (CarbonFlexPolicy, CarbonService, ClusterConfig,
+                        KnowledgeBase, baselines, learn_window, simulate)
+from repro.core import oracle
+from repro.core.knowledge import states_from_schedule
+from repro.core.simulator import SimCase, simulate_many
+
+WEEK = 24 * 7
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+# --- seed-engine reference fixtures ----------------------------------------
+
+
+def _seed_build_entries(jobs, ci, horizon):
+    """The seed's per-job x per-scale loop entry builder (pre-ISSUE-1)."""
+    js, ts, ks, gains, scores, deadlines = [], [], [], [], [], []
+    for idx, job in enumerate(jobs):
+        t0 = max(0, job.arrival)
+        t1 = min(horizon, job.deadline + 1)
+        if t1 <= t0:
+            continue
+        trange = np.arange(t0, t1, dtype=np.int64)
+        civ = ci[trange]
+        for k in range(job.k_min, job.k_max + 1):
+            p = job.marginal(k)
+            if p <= 0:
+                continue
+            js.append(np.full(len(trange), idx, dtype=np.int64))
+            ts.append(trange)
+            ks.append(np.full(len(trange), k, dtype=np.int64))
+            gains.append(np.full(len(trange), p))
+            scores.append(p / civ)
+            deadlines.append(np.full(len(trange), job.deadline, dtype=np.int64))
+    if not js:
+        z = np.zeros(0, dtype=np.int64)
+        return z, z, z, np.zeros(0), np.zeros(0)
+    order = np.lexsort((np.concatenate(deadlines), -np.concatenate(scores)))
+    return tuple(np.concatenate(a)[order] for a in (js, ts, ks, gains, scores))
+
+
+def _seed_solve(jobs, ci, capacity, horizon, max_extensions=8,
+                extension_slots=24):
+    """Seed ``oracle.solve``: loop builder, reference greedy, and the retry
+    loop that always burns the full extension budget on infeasibility."""
+    builder = oracle._build_entries
+    oracle._build_entries = _seed_build_entries      # the seed's hot path
+    try:
+        horizon = int(horizon or len(ci))
+        jobs = [dataclasses.replace(j) for j in jobs]
+        lengths = np.array([j.length for j in jobs])
+        for attempt in range(max_extensions + 1):
+            alloc, used, work = oracle._greedy_numpy_ref(
+                jobs, ci, capacity, horizon, lengths, None)
+            unfinished = work < lengths - 1e-6
+            if not unfinished.any() or attempt == max_extensions:
+                break
+            for idx in np.nonzero(unfinished)[0]:
+                jobs[idx] = dataclasses.replace(
+                    jobs[idx], delay=jobs[idx].delay + extension_slots)
+    finally:
+        oracle._build_entries = builder
+    return alloc, used.astype(np.int64), oracle._rho_curve(jobs, alloc)
+
+
+def _seed_learn(kb, hist, ci, horizon, capacity, num_queues, offsets):
+    for off in offsets:
+        window_jobs = [dataclasses.replace(j, arrival=j.arrival - off)
+                       for j in hist if off <= j.arrival < off + horizon]
+        if not window_jobs:
+            continue
+        alloc, used, rho = _seed_solve(window_jobs, ci.trace[off:off + horizon],
+                                       capacity, horizon)
+        states = states_from_schedule(window_jobs, alloc, ci, num_queues, t0=off)
+        kb.add_window(states, used, rho)
+
+
+# --- scenario ----------------------------------------------------------------
+
+
+def _scenario(full: bool = False):
+    from repro.traces import TraceSpec, generate_trace
+
+    capacity = 150 if full else 60
+    learn_weeks = 3
+    cluster = ClusterConfig.default(capacity=capacity)
+    hours = WEEK * (learn_weeks + 1)
+    ci = CarbonService.synthetic("south-australia", hours + 24 * 30, seed=7)
+    spec = TraceSpec(family="azure", hours=hours, capacity=capacity,
+                     utilization=0.5, seed=8)
+    jobs = generate_trace(spec, cluster.queues)
+    t0 = WEEK * learn_weeks
+    hist = [j for j in jobs if j.arrival < t0]
+    ev = [j for j in jobs if t0 <= j.arrival < t0 + WEEK]
+    offsets = tuple(WEEK * i for i in range(learn_weeks))
+    return cluster, ci, hist, ev, t0, offsets
+
+
+def _timed(fn, repeats=1):
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t)
+    return best, out
+
+
+# --- benchmark sections -------------------------------------------------------
+
+
+def bench_oracle(cluster, ci, hist) -> dict:
+    window = [j for j in hist if j.arrival < WEEK]
+    trace = ci.trace[:WEEK]
+    t_seed, _ = _timed(lambda: _seed_solve(window, trace, cluster.capacity, WEEK))
+    t_new, _ = _timed(lambda: oracle.solve(window, trace, cluster.capacity,
+                                           horizon=WEEK, backend="numpy"))
+    return {"seed_s": round(t_seed, 3), "new_s": round(t_new, 3),
+            "speedup": round(t_seed / t_new, 1), "window_jobs": len(window)}
+
+
+def bench_kb_query(cluster, ci, hist, offsets) -> dict:
+    reps = 200
+    kb_seed = KnowledgeBase(cache=False, backend="jax")
+    kb_new = KnowledgeBase()
+    learn_window(kb_seed, hist, ci, 0, WEEK, cluster.capacity, 3,
+                 offsets=offsets, backend="numpy")
+    learn_window(kb_new, hist, ci, 0, WEEK, cluster.capacity, 3,
+                 offsets=offsets, backend="numpy")
+    state = np.concatenate([[250.0, 0.0, 0.5, 1.0, 1.0], np.ones(6), [1.0, 0.5]])
+    kb_seed.query(state)                      # warm (jit, rebuild)
+    kb_new.query(state)
+    t_seed, _ = _timed(lambda: [kb_seed.query(state) for _ in range(reps)])
+    t_new, _ = _timed(lambda: [kb_new.query(state) for _ in range(reps)])
+    batch = np.tile(state, (1024, 1))
+    kb_new.query_batch(batch[:8])             # warm
+    t_batch, _ = _timed(lambda: kb_new.query_batch(batch))
+    return {
+        "cases": len(kb_new),
+        "seed_ms_per_query": round(t_seed / reps * 1e3, 3),
+        "new_ms_per_query": round(t_new / reps * 1e3, 3),
+        "speedup": round(t_seed / t_new, 1),
+        "batch_queries_per_s": int(1024 / t_batch),
+    }
+
+
+def bench_simulate(cluster, ci, hist, ev, t0, offsets) -> dict:
+    kb = KnowledgeBase()
+    learn_window(kb, hist, ci, 0, WEEK, cluster.capacity, 3,
+                 offsets=offsets, backend="numpy")
+    out = {}
+    for name, mk in [("carbon-agnostic", baselines.CarbonAgnosticPolicy),
+                     ("carbonflex", lambda: CarbonFlexPolicy(kb))]:
+        simulate(ev, ci, cluster, mk(), t0=t0, horizon=WEEK)   # warm pack/jit
+        t_s, rs = _timed(lambda m=mk: simulate(ev, ci, cluster, m(), t0=t0,
+                                               horizon=WEEK, engine="scalar"))
+        t_v, rv = _timed(lambda m=mk: simulate(ev, ci, cluster, m(), t0=t0,
+                                               horizon=WEEK, engine="vector"))
+        assert rs.carbon_g == rv.carbon_g      # parity while we are here
+        out[name] = {"scalar_s": round(t_s, 3), "vector_s": round(t_v, 4),
+                     "speedup": round(t_s / t_v, 1)}
+    out["eval_jobs"] = len(ev)
+    return out
+
+
+def bench_combined(cluster, ci, hist, ev, t0, offsets) -> dict:
+    """The ISSUE-1 acceptance metric: one full learn+execute pipeline
+    (oracle learning windows, then an evaluation week of simulate with a
+    KB query every slot), seed configuration vs new."""
+
+    def seed_pipeline():
+        kb = KnowledgeBase(cache=False, backend="jax")
+        _seed_learn(kb, hist, ci, WEEK, cluster.capacity, 3, offsets)
+        return simulate(ev, ci, cluster, CarbonFlexPolicy(kb), t0=t0,
+                        horizon=WEEK, engine="scalar")
+
+    def new_pipeline():
+        kb = KnowledgeBase()
+        learn_window(kb, hist, ci, 0, WEEK, cluster.capacity, 3,
+                     offsets=offsets, backend="numpy")
+        return simulate_many([SimCase(jobs=ev, ci=ci, cluster=cluster,
+                                      policy=CarbonFlexPolicy(kb), t0=t0,
+                                      horizon=WEEK)])[0]
+
+    new_pipeline()                              # warm jit/pack caches
+    t_seed, r_seed = _timed(seed_pipeline)
+    t_new, r_new = _timed(new_pipeline)
+    return {
+        "seed_s": round(t_seed, 2),
+        "new_s": round(t_new, 2),
+        "speedup": round(t_seed / t_new, 1),
+        "seed_carbon_g": round(r_seed.carbon_g, 1),
+        "new_carbon_g": round(r_new.carbon_g, 1),
+    }
+
+
+def run_all(full: bool = False) -> dict:
+    cluster, ci, hist, ev, t0, offsets = _scenario(full)
+    res = {
+        "scale": {"capacity": cluster.capacity, "learn_weeks": len(offsets),
+                  "hist_jobs": len(hist), "eval_jobs": len(ev),
+                  "full": bool(full)},
+        "oracle_solve": bench_oracle(cluster, ci, hist),
+        "kb_query": bench_kb_query(cluster, ci, hist, offsets),
+        "simulate": bench_simulate(cluster, ci, hist, ev, t0, offsets),
+        "combined_learn_execute": bench_combined(cluster, ci, hist, ev, t0,
+                                                 offsets),
+    }
+    return res
+
+
+def csv_rows(res: dict) -> list[str]:
+    rows = []
+    for section in ("oracle_solve", "kb_query", "combined_learn_execute"):
+        d = res[section]
+        if "seed_s" in d:
+            rows.append(f"bench_engine/{section},{d['new_s'] * 1e6:.0f},"
+                        f"speedup={d['speedup']}x;seed_s={d['seed_s']}")
+        else:
+            rows.append(f"bench_engine/{section},"
+                        f"{d['new_ms_per_query'] * 1e3:.0f},"
+                        f"speedup={d['speedup']}x"
+                        f";batch_qps={d['batch_queries_per_s']}")
+    for pol, d in res["simulate"].items():
+        if isinstance(d, dict):
+            rows.append(f"bench_engine/simulate/{pol},{d['vector_s'] * 1e6:.0f},"
+                        f"speedup={d['speedup']}x;scalar_s={d['scalar_s']}")
+    return rows
+
+
+def run_and_report(out_path: str | None = None, full: bool = False) -> dict:
+    res = run_all(full)
+    path = out_path or os.path.join(ROOT, "BENCH_engine.json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+        f.write("\n")
+    for row in csv_rows(res):
+        print(row)
+    print(f"wrote {os.path.abspath(path)}")
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, help="output JSON path")
+    ap.add_argument("--full", action="store_true",
+                    help="paper scale (capacity 150) instead of CI scale")
+    args = ap.parse_args()
+    run_and_report(args.out, args.full)
+
+
+if __name__ == "__main__":
+    main()

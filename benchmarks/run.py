@@ -15,7 +15,17 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--engine", action="store_true",
+                    help="run the engine micro-benchmark (BENCH_engine.json) "
+                         "instead of the figure suite")
     args = ap.parse_args()
+
+    if args.engine:
+        from . import bench_engine
+
+        print("name,us_per_call,derived")
+        bench_engine.run_and_report()
+        return
 
     from . import figures, roofline
     from .common import cached, csv_rows

@@ -9,6 +9,10 @@ Public surface:
 - ``policy.CarbonFlexPolicy``      — the runtime resource manager
 - ``policy.learn_window``          — the continuous-learning phase
 - ``simulator.simulate``           — the CarbonFlex-Simulator engine
+                                     (vectorised; ``engine="scalar"`` for
+                                     the reference path)
+- ``simulator.simulate_many``      — batched (seeds x regions x policies)
+                                     sweeps through the vector engine
 - ``baselines``                    — §6 baselines (agnostic/GAIA/WaitAwhile/
                                      CarbonScaler/VCC)
 """
@@ -16,5 +20,5 @@ from . import baselines, carbon, emissions, knowledge, oracle, policy, profiles,
 from .carbon import CarbonService, synthesize_trace  # noqa: F401
 from .knowledge import KnowledgeBase  # noqa: F401
 from .policy import CarbonFlexPolicy, OraclePolicy, learn_window  # noqa: F401
-from .simulator import simulate  # noqa: F401
+from .simulator import FaultModel, SimCase, simulate, simulate_many  # noqa: F401
 from .types import ClusterConfig, Job, QueueConfig, SimResult  # noqa: F401

@@ -70,6 +70,26 @@ class CarbonAgnosticPolicy:
     def decide(self, t, active, ci, cluster):
         return cluster.capacity, _fcfs_base_alloc(active, cluster.capacity)
 
+    def decide_packed(self, t, eng, ci, cluster):
+        """Vector-engine fast path: FCFS over packed arrays.  Active rows
+        are already (arrival, job_id)-sorted, so the FCFS order is forced
+        rows then unforced rows, each in row order — identical to the
+        ``_fcfs_base_alloc`` sort key."""
+        rows = eng.rows[eng.remaining[eng.rows] > 1e-9]   # skip done jobs
+        slack = eng.slack_left[rows]
+        order = np.concatenate([rows[slack <= 0], rows[slack > 0]])
+        kmin = eng.packed.k_min
+        kvec = np.zeros(eng.packed.n, dtype=np.int64)
+        m_t = cluster.capacity
+        used = 0
+        for r in order.tolist():
+            k = int(kmin[r])
+            if used + k > m_t:
+                continue
+            kvec[r] = k
+            used += k
+        return m_t, kvec
+
     def on_completion(self, t, job, violated) -> None:
         pass
 

@@ -24,8 +24,10 @@ from . import oracle
 from .carbon import CarbonService
 from .knowledge import KnowledgeBase, build_state, states_from_schedule
 from .provisioning import ProvisioningConfig, provision
-from .scheduling import ActiveJob, schedule
+from .scheduling import ActiveJob, schedule, schedule_packed
 from .types import ClusterConfig, Job
+
+_EPS = 1e-9
 
 
 def learn_window(
@@ -37,7 +39,7 @@ def learn_window(
     capacity: int,
     num_queues: int,
     offsets: tuple[int, ...] = (0,),
-    backend: str = "jax",
+    backend: str = "numpy",
 ) -> list[oracle.OracleResult]:
     """Learning phase over one historical window (optionally replayed at
     several start offsets, §5 'Continuous Learning')."""
@@ -106,6 +108,38 @@ class CarbonFlexPolicy:
                              v, self.cfg, min_required=min_required)
         self._current_m = m_t
         return m_t, schedule(live, m_t, rho)
+
+    def decide_packed(self, t, eng, ci: CarbonService, cluster: ClusterConfig):
+        """Struct-of-arrays fast path for the vector engine.
+
+        Mirrors ``decide`` operation-for-operation (bincounts over the
+        packed queue array, arrival pressure over the admission pointer,
+        ``schedule_packed`` for Algorithm 3) so decisions are identical —
+        asserted by tests/test_engine_parity.py."""
+        ps = eng.packed
+        nq = self._num_queues
+        rows = eng.rows[eng.remaining[eng.rows] > _EPS]   # live jobs
+        counts = np.bincount(ps.queue[rows], minlength=nq).astype(np.float64)
+        # arrival pressure: every job admitted so far (and long enough to
+        # have been live for >= 1 slot, matching _arrivals bookkeeping)
+        adm = slice(0, eng.admitted)
+        seen = ps.length[adm] > _EPS
+        recent = seen & (ps.arrival[adm] > t - 24) & (ps.arrival[adm] <= t)
+        arr24 = np.bincount(ps.queue[adm][recent], minlength=nq).astype(np.float64)
+        mean_el = float(np.mean(ps.elast[rows])) if len(rows) else 0.0
+        total = counts.sum()
+        self._backlog_sum += total
+        self._backlog_n += 1
+        rel = float(total / max(self._backlog_sum / self._backlog_n, 1e-9))
+        state = build_state(ci, t, counts, mean_el, arr24, rel)
+        v = float(np.mean(self._recent)) if self._recent else 0.0
+        forced = rows[eng.slack_left[rows] <= 0]
+        min_required = int(ps.k_min[forced].sum())
+        m_t, rho = provision(state, self.kb, cluster.capacity, self._current_m,
+                             v, self.cfg, min_required=min_required)
+        self._current_m = m_t
+        return m_t, schedule_packed(ps.blocks, ps.k_min, eng.slack_left,
+                                    rows, m_t, rho)
 
     def on_completion(self, t, job: ActiveJob, violated: bool) -> None:
         self._recent.append(violated)
@@ -196,7 +230,7 @@ class CarbonFlexMPCPolicy:
 class OraclePolicy:
     """CarbonFlex(Oracle): Algorithm 1 with full future knowledge (§6.1)."""
 
-    backend: str = "jax"
+    backend: str = "numpy"
     name: str = "oracle"
 
     def on_window_start(self, ci, t0, horizon, jobs, cluster) -> None:
@@ -206,6 +240,10 @@ class OraclePolicy:
         res = oracle.solve(shifted, ci.trace[t0:t0 + span], cluster.capacity,
                            horizon=span, backend=self.backend)
         self._alloc = {j.job_id: res.schedule.alloc[i] for i, j in enumerate(shifted)}
+        # row-indexed view for decide_packed: the engine packs the same
+        # (arrival, job_id)-sorted list it passed to us, so oracle row i
+        # is engine row i
+        self._alloc_mat = res.schedule.alloc
         self._t0 = t0
         self.result = res
 
@@ -217,6 +255,15 @@ class OraclePolicy:
             if row is not None and 0 <= rel < len(row) and row[rel] > 0:
                 alloc[a.job.job_id] = int(row[rel])
         return sum(alloc.values()), alloc
+
+    def decide_packed(self, t, eng, ci, cluster):
+        """Vector-engine fast path: one column gather from the solved
+        allocation matrix instead of a per-job dict walk."""
+        rel = t - self._t0
+        kvec = np.zeros(eng.packed.n, dtype=np.int64)
+        if 0 <= rel < self._alloc_mat.shape[1]:
+            kvec[eng.rows] = self._alloc_mat[eng.rows, rel]
+        return int(kvec.sum()), kvec
 
     def on_completion(self, t, job, violated) -> None:
         pass

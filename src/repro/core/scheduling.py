@@ -124,3 +124,108 @@ def apply_slot(active: list[ActiveJob], alloc: dict[int, int]) -> None:
         else:
             a.slack_left -= 1
             a.waited += 1
+
+
+# --- packed (struct-of-arrays) fast path -----------------------------------
+#
+# The vectorised simulator engine keeps per-job state in flat arrays; the
+# helpers below run Algorithm 3 against those arrays without building
+# ActiveJob lists or per-slot (job, scale) Python enumerations.  Candidate
+# (p, k) pairs per job are static — they depend only on the profile — so
+# they are concatenated once per packed-job build and gathered per slot.
+
+
+@dataclasses.dataclass
+class EntryBlocks:
+    """Per-job candidate (marginal, scale) pairs, concatenated row-major.
+
+    Row j's pairs (k ascending, positive marginals only) live at
+    ``flat_p/flat_k[off[j]:off[j] + cnt[j]]``."""
+
+    flat_p: np.ndarray           # float64 marginals
+    flat_k: np.ndarray           # int64 scales
+    off: np.ndarray              # int64 per-row offset
+    cnt: np.ndarray              # int64 per-row pair count
+
+    @classmethod
+    def build(cls, jobs: list[Job]) -> "EntryBlocks":
+        ps, ks, off, cnt = [], [], [], []
+        pos = 0
+        for job in jobs:
+            pairs = [(job.marginal(k), k)
+                     for k in range(job.k_min, job.k_max + 1)
+                     if job.marginal(k) > 0]
+            off.append(pos)
+            cnt.append(len(pairs))
+            pos += len(pairs)
+            ps.extend(p for p, _ in pairs)
+            ks.extend(k for _, k in pairs)
+        return cls(np.array(ps, dtype=np.float64),
+                   np.array(ks, dtype=np.int64),
+                   np.array(off, dtype=np.int64),
+                   np.array(cnt, dtype=np.int64))
+
+    def gather(self, rows: np.ndarray):
+        """(P, K, R) candidate arrays for ``rows``, preserving row order."""
+        cnt = self.cnt[rows]
+        total = int(cnt.sum())
+        if total == 0:
+            z = np.zeros(0, dtype=np.int64)
+            return np.zeros(0), z, z
+        starts = np.cumsum(cnt) - cnt
+        pos = np.arange(total, dtype=np.int64) - np.repeat(starts, cnt) \
+            + np.repeat(self.off[rows], cnt)
+        return self.flat_p[pos], self.flat_k[pos], np.repeat(rows, cnt)
+
+
+def schedule_packed(
+    blocks: EntryBlocks,
+    k_min: np.ndarray,
+    slack_left: np.ndarray,
+    rows: np.ndarray,
+    m_t: int,
+    rho: float,
+) -> np.ndarray:
+    """Algorithm 3 over packed arrays; returns a full-length ``k`` vector.
+
+    Produces exactly the allocation of ``schedule`` (same candidate order,
+    same stable sort keys, same fill semantics) for ``fill_spare=False`` —
+    asserted by tests/test_engine_parity.py."""
+    kcur = [0] * len(k_min)
+    kml = k_min.tolist()
+    used = 0
+
+    # Forced jobs first (slack exhausted): base allocation, ignore rho.
+    forced = rows[slack_left[rows] <= 0]
+    for r in forced[np.argsort(slack_left[forced], kind="stable")].tolist():
+        k = kml[r]
+        if used + k > m_t:
+            break
+        kcur[r] = k
+        used += k
+
+    # Candidate (job, scale) list (lines 2–5), rho-filtered.
+    P, K, R = blocks.gather(rows)
+    keep = P >= rho - _EPS
+    K, R = K[keep], R[keep]
+    # Sort: marginal throughput desc, then remaining slack asc (line 6);
+    # lexsort is stable, so ties keep (row, k) order like list.sort did.
+    order = np.lexsort((slack_left[R], -P[keep]))
+    rl, kl = R[order].tolist(), K[order].tolist()
+    for i in range(len(rl)):                           # lines 7–9
+        r = rl[i]
+        k = kl[i]
+        cur = kcur[r]
+        if k == kml[r]:
+            if cur != 0:
+                continue
+            add = k
+        else:
+            if cur != k - 1:
+                continue
+            add = 1
+        if used + add > m_t:
+            continue
+        kcur[r] = k
+        used += add
+    return np.array(kcur, dtype=np.int64)

@@ -24,6 +24,13 @@ def knn_topk(cases: jax.Array, query: jax.Array, k: int,
                          interpret=_INTERPRET if interpret is None else interpret)
 
 
+def knn_topk_batch(cases: jax.Array, queries: jax.Array, k: int,
+                   interpret: bool | None = None):
+    return _knn.knn_topk_batch(
+        cases, queries, k,
+        interpret=_INTERPRET if interpret is None else interpret)
+
+
 def score_matrix(marginals, ci, t_start, t_end, interpret: bool | None = None):
     return _score.score_matrix(
         marginals, ci, t_start, t_end,

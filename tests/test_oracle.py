@@ -131,3 +131,85 @@ class TestOracleInvariants:
         alloc = res.schedule.alloc[0]
         assert alloc[1] == 1 and alloc[3] == 1
         assert alloc[[0, 2, 4]].sum() == 0
+
+
+class TestVectorizedEntries:
+    """The meshgrid entry builder and the fast greedy pass must reproduce
+    the original loop-based implementations exactly."""
+
+    def _build_entries_loop(self, jobs, ci, horizon):
+        """The pre-vectorisation builder, inlined as the parity oracle."""
+        js, ts, ks, gains, scores, deadlines = [], [], [], [], [], []
+        for idx, job in enumerate(jobs):
+            t0 = max(0, job.arrival)
+            t1 = min(horizon, job.deadline + 1)
+            if t1 <= t0:
+                continue
+            trange = np.arange(t0, t1, dtype=np.int64)
+            civ = ci[trange]
+            for k in range(job.k_min, job.k_max + 1):
+                p = job.marginal(k)
+                if p <= 0:
+                    continue
+                js.append(np.full(len(trange), idx, dtype=np.int64))
+                ts.append(trange)
+                ks.append(np.full(len(trange), k, dtype=np.int64))
+                gains.append(np.full(len(trange), p))
+                scores.append(p / civ)
+                deadlines.append(np.full(len(trange), job.deadline, dtype=np.int64))
+        if not js:
+            z = np.zeros(0, dtype=np.int64)
+            return z, z, z, np.zeros(0), np.zeros(0)
+        order = np.lexsort((np.concatenate(deadlines), -np.concatenate(scores)))
+        return tuple(np.concatenate(a)[order]
+                     for a in (js, ts, ks, gains, scores))
+
+    @pytest.mark.parametrize("seed", [0, 3, 11])
+    def test_meshgrid_builder_matches_loop_builder(self, seed):
+        rng = np.random.default_rng(seed)
+        horizon = 48
+        ci = rng.uniform(30, 600, horizon)
+        jobs = [
+            mk_job(i, int(rng.integers(0, 40)), float(rng.uniform(0.5, 6)),
+                   int(rng.integers(0, 24)), k_max=int(rng.integers(1, 6)),
+                   sigma=float(rng.uniform(0.1, 1.0)))
+            for i in range(25)
+        ]
+        got = oracle._build_entries(jobs, ci, horizon)
+        want = self._build_entries_loop(jobs, ci, horizon)
+        for g, w, name in zip(got, want, ("j", "t", "k", "gain", "score")):
+            np.testing.assert_array_equal(g, w, err_msg=name)
+
+    def test_builder_empty_cases(self):
+        ci = np.ones(8)
+        assert len(oracle._build_entries([], ci, 8)[0]) == 0
+        late = [mk_job(0, 20, 1.0, 0)]        # arrives past the horizon
+        assert len(oracle._build_entries(late, ci, 8)[0]) == 0
+
+    @pytest.mark.parametrize("seed", [1, 7])
+    def test_fast_greedy_matches_reference_backend(self, seed):
+        rng = np.random.default_rng(seed)
+        horizon = 72
+        ci = rng.uniform(30, 600, horizon)
+        jobs = [
+            mk_job(i, int(rng.integers(0, 48)), float(rng.uniform(0.5, 8)),
+                   int(rng.integers(0, 24)), k_max=int(rng.integers(1, 6)),
+                   sigma=float(rng.uniform(0.1, 1.0)))
+            for i in range(40)
+        ]
+        r_new = oracle.solve(jobs, ci, capacity=8, backend="numpy")
+        r_ref = oracle.solve(jobs, ci, capacity=8, backend="numpy-ref")
+        np.testing.assert_array_equal(r_new.schedule.alloc, r_ref.schedule.alloc)
+        np.testing.assert_array_equal(r_new.capacity_curve, r_ref.capacity_curve)
+        np.testing.assert_array_equal(r_new.rho_curve, r_ref.rho_curve)
+        np.testing.assert_array_equal(r_new.work_done, r_ref.work_done)
+
+    def test_rho_curve_lut_matches_per_slot_min(self):
+        rng = np.random.default_rng(2)
+        jobs = [mk_job(i, 0, 2.0, 4, k_max=4, sigma=0.5) for i in range(6)]
+        alloc = rng.integers(0, 5, size=(6, 10))
+        rho = oracle._rho_curve(jobs, alloc)
+        for t in range(10):
+            ks = alloc[:, t]
+            marg = [jobs[j].marginal(int(ks[j])) for j in np.nonzero(ks)[0]]
+            assert rho[t] == (min(marg) if marg else 1.0)

@@ -1,5 +1,6 @@
 """Algorithm 3 (psi) + provisioning (phi) + knowledge-base tests."""
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.knowledge import KnowledgeBase, build_state, relative_backlog
@@ -149,3 +150,49 @@ class TestProvisioning:
         m, _ = provision(np.full(11, 0.0), kb, capacity=100, current_m=0,
                          violation_rate=0.0, min_required=42)
         assert m >= 42
+
+
+class TestSchedulePacked:
+    """schedule_packed must reproduce schedule() exactly (fill_spare=False)."""
+
+    def _packed_world(self, n, rng):
+        jobs = [
+            mk_active(i, k_max=int(rng.integers(1, 6)),
+                      sigma=float(rng.uniform(0.1, 1.0)),
+                      slack=int(rng.integers(-3, 10)),
+                      remaining=float(rng.uniform(0.5, 5)))
+            for i in range(n)
+        ]
+        from repro.core.scheduling import EntryBlocks
+
+        blocks = EntryBlocks.build([a.job for a in jobs])
+        k_min = np.array([a.job.k_min for a in jobs], dtype=np.int64)
+        slack = np.array([a.slack_left for a in jobs], dtype=np.int64)
+        return jobs, blocks, k_min, slack
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_matches_dict_schedule(self, seed):
+        from repro.core.scheduling import schedule_packed
+
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 12))
+        jobs, blocks, k_min, slack = self._packed_world(n, rng)
+        m = int(rng.integers(0, 25))
+        rho = float(rng.uniform(0.0, 1.2))
+        want = schedule(jobs, m_t=m, rho=rho)
+        kvec = schedule_packed(blocks, k_min, slack,
+                               np.arange(n, dtype=np.int64), m, rho)
+        got = {i: int(k) for i, k in enumerate(kvec) if k > 0}
+        assert got == want, f"m={m} rho={rho}"
+
+    def test_subset_rows(self):
+        from repro.core.scheduling import schedule_packed
+
+        rng = np.random.default_rng(42)
+        jobs, blocks, k_min, slack = self._packed_world(8, rng)
+        rows = np.array([1, 3, 4, 7], dtype=np.int64)
+        want = schedule([jobs[r] for r in rows], m_t=6, rho=0.3)
+        kvec = schedule_packed(blocks, k_min, slack, rows, 6, 0.3)
+        got = {int(r): int(kvec[r]) for r in rows if kvec[r] > 0}
+        # job_id == index by construction in mk_active
+        assert got == want
