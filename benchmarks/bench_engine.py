@@ -35,11 +35,12 @@ import time
 
 import numpy as np
 
-from repro.core import (CarbonFlexPolicy, CarbonService, ClusterConfig,
-                        KnowledgeBase, baselines, learn_window, simulate)
+from repro.core import (CarbonFlexPolicy, KnowledgeBase, baselines,
+                        learn_window, simulate)
 from repro.core import oracle
 from repro.core.knowledge import states_from_schedule
 from repro.core.simulator import SimCase, simulate_many
+from repro.experiment import Scenario
 
 WEEK = 24 * 7
 ROOT = os.path.join(os.path.dirname(__file__), "..")
@@ -115,21 +116,11 @@ def _seed_learn(kb, hist, ci, horizon, capacity, num_queues, offsets):
 
 
 def _scenario(full: bool = False):
-    from repro.traces import TraceSpec, generate_trace
-
-    capacity = 150 if full else 60
-    learn_weeks = 3
-    cluster = ClusterConfig.default(capacity=capacity)
-    hours = WEEK * (learn_weeks + 1)
-    ci = CarbonService.synthetic("south-australia", hours + 24 * 30, seed=7)
-    spec = TraceSpec(family="azure", hours=hours, capacity=capacity,
-                     utilization=0.5, seed=8)
-    jobs = generate_trace(spec, cluster.queues)
-    t0 = WEEK * learn_weeks
-    hist = [j for j in jobs if j.arrival < t0]
-    ev = [j for j in jobs if t0 <= j.arrival < t0 + WEEK]
-    offsets = tuple(WEEK * i for i in range(learn_weeks))
-    return cluster, ci, hist, ev, t0, offsets
+    sc = Scenario(region="south-australia", capacity=150 if full else 60,
+                  learn_weeks=3, seed=7)
+    mat = sc.materialize()
+    return (mat.cluster, mat.ci, mat.hist, mat.eval_jobs, mat.t0,
+            sc.learn_offsets())
 
 
 def _timed(fn, repeats=1):
@@ -159,9 +150,9 @@ def bench_kb_query(cluster, ci, hist, offsets) -> dict:
     reps = 200
     kb_seed = KnowledgeBase(cache=False, backend="jax")
     kb_new = KnowledgeBase()
-    learn_window(kb_seed, hist, ci, 0, WEEK, cluster.capacity, 3,
+    learn_window(kb_seed, hist, ci, 0, WEEK, cluster,
                  offsets=offsets, backend="numpy")
-    learn_window(kb_new, hist, ci, 0, WEEK, cluster.capacity, 3,
+    learn_window(kb_new, hist, ci, 0, WEEK, cluster,
                  offsets=offsets, backend="numpy")
     state = np.concatenate([[250.0, 0.0, 0.5, 1.0, 1.0], np.ones(6), [1.0, 0.5]])
     kb_seed.query(state)                      # warm (jit, rebuild)
@@ -182,7 +173,7 @@ def bench_kb_query(cluster, ci, hist, offsets) -> dict:
 
 def bench_simulate(cluster, ci, hist, ev, t0, offsets) -> dict:
     kb = KnowledgeBase()
-    learn_window(kb, hist, ci, 0, WEEK, cluster.capacity, 3,
+    learn_window(kb, hist, ci, 0, WEEK, cluster,
                  offsets=offsets, backend="numpy")
     out = {}
     for name, mk in [("carbon-agnostic", baselines.CarbonAgnosticPolicy),
@@ -212,7 +203,7 @@ def bench_combined(cluster, ci, hist, ev, t0, offsets) -> dict:
 
     def new_pipeline():
         kb = KnowledgeBase()
-        learn_window(kb, hist, ci, 0, WEEK, cluster.capacity, 3,
+        learn_window(kb, hist, ci, 0, WEEK, cluster,
                      offsets=offsets, backend="numpy")
         return simulate_many([SimCase(jobs=ev, ci=ci, cluster=cluster,
                                       policy=CarbonFlexPolicy(kb), t0=t0,

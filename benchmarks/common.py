@@ -1,119 +1,33 @@
-"""Shared benchmark harness: one simulated scenario per paper figure.
+"""Shared benchmark harness over the ``repro.experiment`` API.
 
 Scale note: the paper's evaluation uses 150-server clusters and week-long
 traces with year-long simulator sweeps.  The benchmarks reproduce every
 figure's *comparison* at a CI-friendly scale (capacity 60, 3 learning
-weeks + 1 evaluation week) by default; pass ``--full`` to run the paper's
-scale.  Results are cached as JSON under results/bench/.
+weeks + 1 evaluation week — the experiment ``Scenario`` defaults); pass
+``--full`` to run the paper's scale.  Results are cached as JSON under
+results/bench/.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import time
 
-import numpy as np
-
-from repro.core import (CarbonFlexPolicy, CarbonService, ClusterConfig,
-                        KnowledgeBase, OraclePolicy, baselines, learn_window,
-                        simulate)
-from repro.core.policy import CarbonFlexMPCPolicy
-from repro.traces import TraceSpec, generate_trace, mean_length
+from repro.experiment import Scenario, run as run_experiment
 
 WEEK = 24 * 7
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
 
-
-@dataclasses.dataclass
-class Scenario:
-    region: str = "south-australia"
-    family: str = "azure"
-    capacity: int = 60
-    utilization: float = 0.5
-    learn_weeks: int = 3
-    seed: int = 7
-    elasticity: str = "mix"
-    mode: str = "cpu"
-    delay_scale: float = 1.0
-    length_scale: float = 1.0
-    rate_scale: float = 1.0
-    delay_override: int | None = None   # uniform delay (Fig. 9 / Fig. 14)
-
-    def build(self):
-        from repro.core.types import QueueConfig, default_queues
-
-        if self.delay_override is not None:
-            queues = tuple(
-                QueueConfig(q.name, max(self.delay_override, 0), q.max_length)
-                for q in default_queues())
-        else:
-            queues = tuple(default_queues(self.delay_scale))
-        cluster = ClusterConfig(capacity=self.capacity, queues=queues)
-        hours = WEEK * (self.learn_weeks + 1)
-        ci = CarbonService.synthetic(self.region, hours + 24 * 30, seed=self.seed)
-        spec = TraceSpec(family=self.family, hours=hours, capacity=self.capacity,
-                         utilization=self.utilization, seed=self.seed + 1,
-                         elasticity=self.elasticity, mode=self.mode,
-                         length_scale=self.length_scale,
-                         rate_scale=self.rate_scale)
-        jobs = generate_trace(spec, cluster.queues)
-        t_eval = WEEK * self.learn_weeks
-        hist = [j for j in jobs if j.arrival < t_eval]
-        ev = [j for j in jobs if t_eval <= j.arrival < t_eval + WEEK]
-        return cluster, ci, spec, jobs, hist, ev, t_eval
+__all__ = ["Scenario", "run_policies", "cached", "csv_rows", "WEEK"]
 
 
 def run_policies(sc: Scenario, policies: list[str] | None = None) -> dict:
-    """Runs the named policies on the scenario; returns per-policy metrics."""
-    cluster, ci, spec, jobs, hist, ev, t0 = sc.build()
-    ml = mean_length(spec)
-    out = {}
-
-    def kb_policy():
-        kb = KnowledgeBase()
-        offs = tuple(WEEK * i for i in range(sc.learn_weeks))
-        learn_window(kb, hist, ci, 0, WEEK, cluster.capacity,
-                     len(cluster.queues), offsets=offs, backend="numpy")
-        return CarbonFlexPolicy(kb)
-
-    def mpc_policy():
-        p = CarbonFlexMPCPolicy()
-        p.warm_start(hist)
-        return p
-
-    registry = {
-        "carbon-agnostic": baselines.CarbonAgnosticPolicy,
-        "gaia": lambda: baselines.GaiaPolicy(mean_length=ml),
-        "wait-awhile": baselines.WaitAwhilePolicy,
-        "carbonscaler": lambda: baselines.CarbonScalerPolicy(mean_length=ml),
-        "vcc": lambda: baselines.VCCPolicy(utilization=sc.utilization),
-        "vcc-scaling": lambda: baselines.VCCPolicy(scaling=True,
-                                                   utilization=sc.utilization),
-        "carbonflex": kb_policy,
-        "carbonflex-mpc": mpc_policy,
-        "oracle": lambda: OraclePolicy(backend="numpy"),
-    }
-    names = policies or ["carbon-agnostic", "gaia", "wait-awhile",
-                         "carbonscaler", "carbonflex", "carbonflex-mpc",
-                         "oracle"]
-    for name in names:
-        t = time.time()
-        pol = registry[name]()
-        r = simulate(ev, ci, cluster, pol, t0=t0, horizon=WEEK)
-        out[name] = {
-            "carbon_g": r.carbon_g,
-            "energy_kwh": r.energy_kwh,
-            "mean_wait_h": r.mean_wait,
-            "violation_rate": r.violation_rate,
-            "runtime_s": round(time.time() - t, 2),
-        }
-    base = out.get("carbon-agnostic")
-    if base:
-        for name, m in out.items():
-            m["savings_pct"] = round(
-                100.0 * (1.0 - m["carbon_g"] / base["carbon_g"]), 2)
-    return out
+    """Run the named registry policies on the scenario through the
+    experiment driver; returns the per-policy metric dicts the figure
+    caches store.  Per-policy runtimes are not reported: the driver
+    evaluates all policies in one batched ``simulate_many`` dispatch
+    (``cached`` records the figure-level wall time as ``_runtime_s``)."""
+    return run_experiment(sc, policies).metrics()
 
 
 def cached(name: str, fn, force: bool = False):

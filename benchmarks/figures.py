@@ -1,5 +1,9 @@
 """One benchmark per paper figure/table (§6).  Each returns a dict cached
-under results/bench/<name>.json; ``benchmarks.run`` prints the CSV."""
+under results/bench/<name>.json; ``benchmarks.run`` prints the CSV.
+
+Every figure is a declarative ``repro.experiment.Scenario`` (or a small
+grid of them) handed to ``run_policies`` — the experiment driver owns the
+learn/execute pipeline."""
 from __future__ import annotations
 
 import dataclasses
@@ -81,41 +85,14 @@ def fig12_locations() -> dict:
 
 def fig13_shift() -> dict:
     """Fig. 13: ±20% arrival-rate / job-length distribution shift between
-    the learning and evaluation phases."""
+    the learning and evaluation phases (``Scenario.eval_shift`` regenerates
+    the evaluation weeks from the shifted distribution while learning stays
+    on the unshifted trace)."""
     out = {}
     for shift in [-0.2, -0.1, 0.0, 0.1, 0.2]:
-        sc = Scenario()
-        cluster, ci, spec, jobs, hist, ev, t0 = sc.build()
-        shifted = dataclasses.replace(
-            spec, length_scale=1 + shift, rate_scale=1 + shift,
-            seed=spec.seed + 99)
-        from repro.traces import generate_trace
-
-        ev_jobs = [j for j in generate_trace(shifted, cluster.queues)
-                   if t0 <= j.arrival < t0 + 24 * 7]
-        from repro.core import (CarbonFlexPolicy, KnowledgeBase, OraclePolicy,
-                                baselines, learn_window, simulate)
-
-        kb = KnowledgeBase()
-        learn_window(kb, hist, ci, 0, 24 * 7, cluster.capacity,
-                     len(cluster.queues),
-                     offsets=tuple(24 * 7 * i for i in range(sc.learn_weeks)),
-                     backend="numpy")
-        res = {}
-        for name, pol in [
-            ("carbon-agnostic", baselines.CarbonAgnosticPolicy()),
-            ("carbonflex", CarbonFlexPolicy(kb)),
-            ("oracle", OraclePolicy(backend="numpy")),
-        ]:
-            t = time.time()
-            r = simulate(ev_jobs, ci, cluster, pol, t0=t0, horizon=24 * 7)
-            res[name] = {"carbon_g": r.carbon_g, "mean_wait_h": r.mean_wait,
-                         "violation_rate": r.violation_rate,
-                         "runtime_s": round(time.time() - t, 2)}
-        base = res["carbon-agnostic"]["carbon_g"]
-        for m in res.values():
-            m["savings_pct"] = round(100 * (1 - m["carbon_g"] / base), 2)
-        out[f"shift={shift:+.0%}"] = res
+        out[f"shift={shift:+.0%}"] = run_policies(
+            Scenario(eval_shift=shift),
+            ["carbon-agnostic", "carbonflex", "oracle"])
     return out
 
 
@@ -131,12 +108,11 @@ def tab_overheads() -> dict:
     checkpoint/rescale cost."""
     import jax
 
-    from repro.core import CarbonService, KnowledgeBase, learn_window
+    from repro.core import KnowledgeBase, learn_window
     from repro.core.oracle import solve
-    from .common import Scenario
 
-    sc = Scenario()
-    cluster, ci, spec, jobs, hist, ev, t0 = sc.build()
+    mat = Scenario().materialize()
+    cluster, ci, hist = mat.cluster, mat.ci, mat.hist
     out = {}
 
     t = time.time()
@@ -152,7 +128,7 @@ def tab_overheads() -> dict:
     out["oracle_week_jax_s"] = round(time.time() - t, 2)
 
     kb = KnowledgeBase()
-    learn_window(kb, hist, ci, 0, 24 * 7, cluster.capacity, 3,
+    learn_window(kb, hist, ci, 0, 24 * 7, cluster,
                  offsets=(0, 24 * 7), backend="numpy")
     state = np.concatenate([[250.0, 0.0, 0.5, 1.0, 1.0],
                             np.ones(6), [1.0, 0.5]])
@@ -195,34 +171,15 @@ def tpu_cluster() -> dict:
 def fault_sensitivity() -> dict:
     """Beyond-paper: carbon savings under injected stragglers/failures —
     the Algorithm-2 violation-feedback loop absorbing degraded slots."""
-    import time as _t
-
-    from repro.core.policy import CarbonFlexMPCPolicy
     from repro.core.simulator import FaultModel
-    from repro.core import baselines, simulate
 
-    sc = Scenario(capacity=40)
-    cluster, ci, spec, jobs, hist, ev, t0 = sc.build()
     out = {}
     for rate in [0.0, 0.1, 0.2]:
-        res = {}
-        for name, mk in [("carbon-agnostic", baselines.CarbonAgnosticPolicy),
-                         ("carbonflex-mpc", CarbonFlexMPCPolicy)]:
-            pol = mk()
-            if name == "carbonflex-mpc":
-                pol.warm_start(hist)
-            t = _t.time()
-            r = simulate(ev, ci, cluster, pol, t0=t0, horizon=24 * 7,
-                         faults=FaultModel(straggler_rate=rate,
-                                           failure_rate=rate / 4, seed=5)
-                         if rate else None)
-            res[name] = {"carbon_g": r.carbon_g, "mean_wait_h": r.mean_wait,
-                         "violation_rate": r.violation_rate,
-                         "runtime_s": round(_t.time() - t, 2)}
-        base = res["carbon-agnostic"]["carbon_g"]
-        for m in res.values():
-            m["savings_pct"] = round(100 * (1 - m["carbon_g"] / base), 2)
-        out[f"straggler={rate:.0%}"] = res
+        faults = FaultModel(straggler_rate=rate, failure_rate=rate / 4,
+                            seed=5) if rate else None
+        out[f"straggler={rate:.0%}"] = run_policies(
+            Scenario(capacity=40, faults=faults),
+            ["carbon-agnostic", "carbonflex-mpc"])
     return out
 
 

@@ -1,9 +1,12 @@
 """Year-long CarbonFlex-Simulator run (paper §5 'Simulation Environment').
 
-Simulates 52 weeks of cluster operation with weekly continuous re-learning
-(the rolling knowledge-base window of §4.2), reporting cumulative carbon
-per policy.  Scale knobs keep the default run to a few minutes; raise
---weeks / --capacity for the paper's full scale.
+Simulates many weeks of cluster operation with weekly continuous
+re-learning (the rolling knowledge-base window of §4.2): the experiment
+driver replays each evaluated week through the offline oracle before the
+next, ages old windows out of the knowledge base (``max_windows``), and
+keeps the MPC policy's length histories warm.  Scale knobs keep the
+default run to a few minutes; raise --weeks / --capacity for the paper's
+full scale.
 
   PYTHONPATH=src python examples/cluster_sim_year.py --weeks 8
 """
@@ -13,66 +16,26 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
-
-from repro.core import (CarbonFlexPolicy, CarbonService, ClusterConfig,
-                        KnowledgeBase, baselines, learn_window, simulate)
-from repro.core.policy import CarbonFlexMPCPolicy
-from repro.traces import TraceSpec, generate_trace
-
-WEEK = 24 * 7
+from repro.experiment import Scenario, run
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--weeks", type=int, default=6)
     ap.add_argument("--capacity", type=int, default=30)
     ap.add_argument("--region", default="california")
     ap.add_argument("--seed", type=int, default=5)
     args = ap.parse_args()
 
-    cluster = ClusterConfig.default(capacity=args.capacity)
-    hours = WEEK * (args.weeks + 2)
-    ci = CarbonService.synthetic(args.region, hours + 24 * 30, seed=args.seed)
-    spec = TraceSpec(family="azure", hours=hours, capacity=args.capacity,
-                     seed=args.seed + 1)
-    jobs = generate_trace(spec, cluster.queues)
-
-    kb = KnowledgeBase(max_windows=4)        # rolling aging window
-    totals = {"carbon-agnostic": 0.0, "wait-awhile": 0.0,
-              "carbonflex": 0.0, "carbonflex-mpc": 0.0}
-    waits = {k: [] for k in totals}
-    mpc = CarbonFlexMPCPolicy()
-
-    for week in range(1, args.weeks + 1):
-        # continuous learning: replay last week through the oracle
-        hist = [j for j in jobs if (week - 1) * WEEK <= j.arrival < week * WEEK]
-        learn_window(kb, hist, ci, 0, WEEK, cluster.capacity,
-                     len(cluster.queues), offsets=((week - 1) * WEEK,),
-                     backend="numpy")
-        mpc.warm_start(hist)
-
-        ev = [j for j in jobs if week * WEEK <= j.arrival < (week + 1) * WEEK]
-        if not ev:
-            continue
-        for name, pol in [
-            ("carbon-agnostic", baselines.CarbonAgnosticPolicy()),
-            ("wait-awhile", baselines.WaitAwhilePolicy()),
-            ("carbonflex", CarbonFlexPolicy(kb)),
-            ("carbonflex-mpc", mpc),
-        ]:
-            r = simulate(ev, ci, cluster, pol, t0=week * WEEK, horizon=WEEK)
-            totals[name] += r.carbon_g
-            waits[name].append(r.mean_wait)
-        print(f"week {week}: kb={len(kb)} cases; cumulative savings "
-              f"flex={100 * (1 - totals['carbonflex'] / totals['carbon-agnostic']):.1f}% "
-              f"mpc={100 * (1 - totals['carbonflex-mpc'] / totals['carbon-agnostic']):.1f}%")
-
-    base = totals["carbon-agnostic"]
-    print(f"\n{'policy':18s} {'carbon kg':>10s} {'savings':>8s} {'wait h':>7s}")
-    for name, tot in totals.items():
-        print(f"{name:18s} {tot / 1e3:10.1f} {100 * (1 - tot / base):7.1f}% "
-              f"{np.mean(waits[name]):7.1f}")
+    scenario = Scenario(region=args.region, capacity=args.capacity,
+                        seed=args.seed, learn_weeks=1, eval_weeks=args.weeks)
+    result = run(scenario,
+                 ["carbon-agnostic", "wait-awhile", "carbonflex",
+                  "carbonflex-mpc"],
+                 kb_kwargs=dict(max_windows=4),      # rolling aging window
+                 progress=print)
+    print()
+    print(result.table())
 
 
 if __name__ == "__main__":

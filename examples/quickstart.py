@@ -1,59 +1,46 @@
 """Quickstart: CarbonFlex end-to-end on a synthetic cluster.
 
-Learns provisioning/scheduling from 3 weeks of history (continuous
-learning over the offline oracle), then manages a 1-week evaluation
-window, comparing against the carbon-agnostic status quo and the oracle.
+Declares the experiment as a ``Scenario`` (3 weeks of history feeding the
+continuous-learning loop, 1 evaluation week) and lets the driver do the
+rest: oracle replay into the knowledge base, policy construction through
+the registry, batched evaluation against the carbon-agnostic status quo
+and the offline-optimal oracle.
 
   PYTHONPATH=src python examples/quickstart.py
+  PYTHONPATH=src python examples/quickstart.py --tiny     # CI smoke run
 """
-import numpy as np
+import argparse
+import os
+import sys
 
-from repro.core import (CarbonFlexPolicy, CarbonService, ClusterConfig,
-                        KnowledgeBase, OraclePolicy, baselines, learn_window,
-                        simulate)
-from repro.core.policy import CarbonFlexMPCPolicy
-from repro.traces import TraceSpec, generate_trace
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-WEEK = 24 * 7
+from repro.experiment import Scenario, run
 
 
 def main() -> None:
-    cluster = ClusterConfig.default(capacity=40)
-    ci = CarbonService.synthetic("south-australia", WEEK * 5, seed=1)
-    spec = TraceSpec(family="azure", hours=WEEK * 4, capacity=40, seed=2)
-    jobs = generate_trace(spec, cluster.queues)
-    hist = [j for j in jobs if j.arrival < WEEK * 3]
-    ev = [j for j in jobs if WEEK * 3 <= j.arrival < WEEK * 4]
-    print(f"{len(hist)} historical jobs, {len(ev)} evaluation jobs, "
-          f"M={cluster.capacity}")
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--region", default="south-australia")
+    ap.add_argument("--capacity", type=int, default=40)
+    ap.add_argument("--learn-weeks", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--tiny", action="store_true",
+                    help="minutes-not-hours smoke configuration for CI")
+    args = ap.parse_args()
 
-    # --- learning phase: replay history through the offline oracle --------
-    kb = KnowledgeBase()
-    learn_window(kb, hist, ci, 0, WEEK, cluster.capacity,
-                 len(cluster.queues), offsets=(0, WEEK, 2 * WEEK))
-    print(f"knowledge base: {len(kb)} (STATE -> m, rho) cases")
+    if args.tiny:
+        args.capacity, args.learn_weeks = 10, 1
 
-    # --- execution phase ---------------------------------------------------
-    mpc = CarbonFlexMPCPolicy()
-    mpc.warm_start(hist)
-    policies = [
-        baselines.CarbonAgnosticPolicy(),
-        baselines.WaitAwhilePolicy(),
-        CarbonFlexPolicy(kb),
-        mpc,
-        OraclePolicy(),
-    ]
-    results = {}
-    for pol in policies:
-        results[pol.name] = simulate(ev, ci, cluster, pol,
-                                     t0=WEEK * 3, horizon=WEEK)
-    base = results["carbon-agnostic"]
-    print(f"\n{'policy':18s} {'carbon kg':>10s} {'savings':>8s} "
-          f"{'wait h':>7s} {'viol':>6s}")
-    for name, r in results.items():
-        print(f"{name:18s} {r.carbon_g / 1e3:10.1f} "
-              f"{r.savings_vs(base):7.1f}% {r.mean_wait:7.1f} "
-              f"{r.violation_rate:6.3f}")
+    scenario = Scenario(region=args.region, capacity=args.capacity,
+                        learn_weeks=args.learn_weeks, seed=args.seed)
+    world = scenario.materialize()
+    print(f"{len(world.hist)} historical jobs, {len(world.eval_jobs)} "
+          f"evaluation jobs, M={world.cluster.capacity}")
+
+    result = run(scenario, ["carbon-agnostic", "wait-awhile", "carbonflex",
+                            "carbonflex-mpc", "oracle"])
+    print(f"knowledge base: {result.kb_size} (STATE -> m, rho) cases\n")
+    print(result.table())
 
 
 if __name__ == "__main__":

@@ -1,50 +1,42 @@
 """Dev harness: consistent in-process A/B of CarbonFlexPolicy variants.
 
+Each variant is one knowledge-base configuration (feature weights) run
+through the same declarative ``Scenario`` — the experiment driver owns the
+learn/execute pipeline, so a variant is just ``run(sc, ["carbonflex"],
+kb_kwargs=...)`` against the shared reference runs.
+
 Usage: PYTHONPATH=src python scripts/tune_policy.py [--quick]
 """
+import os
 import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 
-from repro.core import (CarbonService, ClusterConfig, KnowledgeBase,
-                        CarbonFlexPolicy, OraclePolicy, learn_window,
-                        simulate, baselines)
-from repro.core.policy import CarbonFlexMPCPolicy
-from repro.traces import TraceSpec, generate_trace, mean_length
+from repro.experiment import Scenario, run
 
 
-def setup(region="south-australia", family="azure", capacity=150, seed=1):
-    cluster = ClusterConfig.default(capacity=capacity)
-    hours = 24 * 7 * 4
-    ci = CarbonService.synthetic(region, hours + 24 * 30, seed=seed)
-    spec = TraceSpec(family=family, hours=hours, capacity=capacity, seed=seed + 1)
-    jobs = generate_trace(spec, cluster.queues)
-    eval_jobs = [j for j in jobs if 24 * 21 <= j.arrival < 24 * 28]
-    return cluster, ci, spec, jobs, eval_jobs
-
-
-def run_variants(variants, region="south-australia", seed=1):
-    cluster, ci, spec, jobs, eval_jobs = setup(region=region, seed=seed)
-    base = simulate(eval_jobs, ci, cluster, baselines.CarbonAgnosticPolicy(),
-                    t0=24 * 21, horizon=24 * 7)
-    orc = simulate(eval_jobs, ci, cluster, OraclePolicy(backend="numpy"),
-                   t0=24 * 21, horizon=24 * 7)
-    print(f"[{region} seed={seed}] oracle {orc.savings_vs(base):6.2f}%  wait {orc.mean_wait:.1f}")
+def run_variants(variants, region="south-australia", seed=1, capacity=150):
+    sc = Scenario(region=region, capacity=capacity, learn_weeks=3, seed=seed)
+    ref = run(sc, ["carbon-agnostic", "carbonflex-mpc", "oracle"])
+    base_carbon = ref.carbon_g("carbon-agnostic")
+    print(f"[{region} seed={seed}] oracle {ref.savings('oracle'):6.2f}%  "
+          f"wait {ref.mean_wait('oracle'):.1f}")
+    print(f"  {'carbonflex-mpc':28s} savings {ref.savings('carbonflex-mpc'):6.2f}%"
+          f"  wait {ref.mean_wait('carbonflex-mpc'):5.1f}"
+          f"  viol {ref.violation_rate('carbonflex-mpc'):.3f}")
     out = {}
-    mpc = simulate(eval_jobs, ci, cluster, CarbonFlexMPCPolicy(), t0=24 * 21, horizon=24 * 7)
-    print(f"  {'carbonflex-mpc':28s} savings {mpc.savings_vs(base):6.2f}%  wait {mpc.mean_wait:5.1f}"
-          f"  viol {mpc.violation_rate:.3f}")
     for name, kb_kwargs in variants.items():
-        kb = KnowledgeBase(**kb_kwargs)
-        learn_window(kb, jobs, ci, 0, 24 * 7, cluster.capacity, 3,
-                     offsets=(0, 24 * 7, 24 * 14), backend="numpy")
-        r = simulate(eval_jobs, ci, cluster, CarbonFlexPolicy(kb),
-                     t0=24 * 21, horizon=24 * 7)
-        ms = np.array([s.provisioned for s in r.slots])
-        cis = np.array([s.ci for s in r.slots])
-        print(f"  {name:28s} savings {r.savings_vs(base):6.2f}%  wait {r.mean_wait:5.1f}"
-              f"  viol {r.violation_rate:.3f}  corr {np.corrcoef(ms, cis)[0, 1]:6.3f}")
-        out[name] = r.savings_vs(base)
+        r = run(sc, ["carbonflex"], kb_kwargs=kb_kwargs)
+        sim = r.weekly["carbonflex"][0]
+        ms = np.array([s.provisioned for s in sim.slots])
+        cis = np.array([s.ci for s in sim.slots])
+        savings = 100.0 * (1.0 - r.carbon_g("carbonflex") / base_carbon)
+        print(f"  {name:28s} savings {savings:6.2f}%  wait {sim.mean_wait:5.1f}"
+              f"  viol {sim.violation_rate:.3f}"
+              f"  corr {np.corrcoef(ms, cis)[0, 1]:6.3f}")
+        out[name] = savings
     return out
 
 

@@ -15,10 +15,15 @@ Public surface:
                                      sweeps through the vector engine
 - ``baselines``                    — §6 baselines (agnostic/GAIA/WaitAwhile/
                                      CarbonScaler/VCC)
+- ``policy.Policy``                — the protocol every policy implements
+
+The declarative experiment layer (policy registry, ``Scenario``, ``run``,
+``Sweep``) lives one level up in ``repro.experiment``.
 """
 from . import baselines, carbon, emissions, knowledge, oracle, policy, profiles, provisioning, scheduling, simulator, types  # noqa: F401
 from .carbon import CarbonService, synthesize_trace  # noqa: F401
 from .knowledge import KnowledgeBase  # noqa: F401
-from .policy import CarbonFlexPolicy, OraclePolicy, learn_window  # noqa: F401
+from .policy import (CarbonFlexPolicy, LearnOutcome, OraclePolicy, Policy,  # noqa: F401
+                     learn_window)
 from .simulator import FaultModel, SimCase, simulate, simulate_many  # noqa: F401
 from .types import ClusterConfig, Job, QueueConfig, SimResult  # noqa: F401

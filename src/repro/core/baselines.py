@@ -165,6 +165,7 @@ class CarbonScalerPolicy:
 
     def on_window_start(self, ci, t0, horizon, jobs, cluster) -> None:
         self._plan: dict[int, np.ndarray] = {}
+        self._plan_t0: dict[int, int] = {}
 
     def _make_plan(self, a: ActiveJob, t: int, ci: CarbonService) -> np.ndarray:
         """Single-job Algorithm-1 greedy over the job's own window, using the
@@ -203,7 +204,6 @@ class CarbonScalerPolicy:
                 continue
             if a.job.job_id not in self._plan:
                 self._plan[a.job.job_id] = self._make_plan(a, t, ci)
-                self._plan_t0 = getattr(self, "_plan_t0", {})
                 self._plan_t0[a.job.job_id] = t
             plan = self._plan[a.job.job_id]
             rel = t - self._plan_t0[a.job.job_id]

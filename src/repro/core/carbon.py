@@ -41,7 +41,12 @@ def synthesize_trace(
     start_hour: int = 0,
 ) -> np.ndarray:
     """Seeded synthetic hourly CI trace for ``region`` (g CO2eq/kWh)."""
-    mean, cov = REGIONS[region]
+    try:
+        mean, cov = REGIONS[region]
+    except KeyError:
+        raise ValueError(
+            f"unknown region {region!r}; available regions: "
+            f"{', '.join(sorted(REGIONS))}") from None
     import zlib
 
     rng = np.random.default_rng(

@@ -16,7 +16,10 @@ full future knowledge — the CarbonFlex(Oracle) baseline of §6.
 from __future__ import annotations
 
 import dataclasses
+import logging
+import warnings
 from collections import deque
+from typing import Iterator, Protocol, runtime_checkable
 
 import numpy as np
 
@@ -29,6 +32,52 @@ from .types import ClusterConfig, Job
 
 _EPS = 1e-9
 
+logger = logging.getLogger(__name__)
+
+
+@runtime_checkable
+class Policy(Protocol):
+    """The provisioning+scheduling policy protocol the simulator drives.
+
+    Per slot the engine calls ``decide`` with the active set and expects
+    ``(m_t, allocations)``; ``on_window_start`` resets per-window state and
+    ``on_completion`` feeds back each finished job (the violation-feedback
+    input of Algorithm 2).  Policies may additionally implement the optional
+    ``decide_packed(t, eng, ci, cluster)`` fast path to run directly over
+    the vector engine's struct-of-arrays state."""
+
+    name: str
+
+    def on_window_start(self, ci: CarbonService, t0: int, horizon: int,
+                        jobs: list[Job], cluster: ClusterConfig) -> None: ...
+
+    def decide(self, t: int, active: list[ActiveJob], ci: CarbonService,
+               cluster: ClusterConfig) -> tuple[int, dict[int, int]]: ...
+
+    def on_completion(self, t: int, job: ActiveJob, violated: bool) -> None: ...
+
+
+@dataclasses.dataclass
+class LearnOutcome:
+    """Result of one ``learn_window`` call: the per-offset oracle solutions
+    plus which replay offsets actually contributed cases (an offset whose
+    window holds no arrivals is skipped, not an error — ``empty`` records
+    it so callers can see a silent gap in the case base)."""
+
+    results: list[oracle.OracleResult]
+    contributed: tuple[int, ...]
+    empty: tuple[int, ...]
+
+    # list-compat: existing callers iterate / index the oracle results
+    def __iter__(self) -> Iterator[oracle.OracleResult]:
+        return iter(self.results)
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def __getitem__(self, i):
+        return self.results[i]
+
 
 def learn_window(
     kb: KnowledgeBase,
@@ -36,14 +85,38 @@ def learn_window(
     ci: CarbonService,
     t0: int,
     horizon: int,
-    capacity: int,
-    num_queues: int,
+    cluster: ClusterConfig | int,
+    num_queues: int | None = None,
     offsets: tuple[int, ...] = (0,),
     backend: str = "numpy",
-) -> list[oracle.OracleResult]:
+) -> LearnOutcome:
     """Learning phase over one historical window (optionally replayed at
-    several start offsets, §5 'Continuous Learning')."""
-    results = []
+    several start offsets, §5 'Continuous Learning').
+
+    ``cluster`` is a ``ClusterConfig``; the loose ``(capacity, num_queues)``
+    integer pair is still accepted but deprecated.  Offsets whose window
+    contains no arrivals are skipped and reported in ``LearnOutcome.empty``.
+    """
+    if isinstance(cluster, ClusterConfig):
+        if num_queues is not None:
+            raise TypeError("num_queues is implied by ClusterConfig — "
+                            "pass one or the other, not both")
+        capacity = cluster.capacity
+        nq = len(cluster.queues)
+    else:
+        if num_queues is None:
+            raise TypeError("num_queues is required with the deprecated "
+                            "integer-capacity form")
+        warnings.warn(
+            "learn_window(..., capacity, num_queues) is deprecated; "
+            "pass a ClusterConfig instead",
+            DeprecationWarning, stacklevel=2)
+        capacity = int(cluster)
+        nq = int(num_queues)
+
+    results: list[oracle.OracleResult] = []
+    contributed: list[int] = []
+    empty: list[int] = []
     for off in offsets:
         s0 = t0 + off
         window_jobs = [
@@ -52,14 +125,20 @@ def learn_window(
             if s0 <= j.arrival < s0 + horizon
         ]
         if not window_jobs:
+            empty.append(off)
             continue
         ci_slice = ci.trace[s0:s0 + horizon]
         res = oracle.solve(window_jobs, ci_slice, capacity, horizon=horizon, backend=backend)
         states = states_from_schedule(window_jobs, res.schedule.alloc,
-                                      ci, num_queues, t0=s0)
+                                      ci, nq, t0=s0)
         kb.add_window(states, res.capacity_curve, res.rho_curve)
         results.append(res)
-    return results
+        contributed.append(off)
+    if empty:
+        logger.info("learn_window: offsets %s held no arrivals in "
+                    "[t0+off, t0+off+%d) and were skipped", tuple(empty), horizon)
+    return LearnOutcome(results=results, contributed=tuple(contributed),
+                        empty=tuple(empty))
 
 
 @dataclasses.dataclass

@@ -31,12 +31,13 @@ the vector engine, packing each distinct job list once.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Protocol, Sequence
+from typing import Iterable, Sequence
 
 import numpy as np
 
 from . import emissions
 from .carbon import CarbonService
+from .policy import Policy
 from .scheduling import ActiveJob, EntryBlocks, apply_slot
 from .types import ClusterConfig, Job, SimResult, SlotLog
 
@@ -84,18 +85,6 @@ class FaultModel:
             u < self.failure_rate, 0.0,
             np.where(u < self.failure_rate + self.straggler_rate,
                      self.straggler_slowdown, 1.0))
-
-
-class Policy(Protocol):
-    name: str
-
-    def on_window_start(self, ci: CarbonService, t0: int, horizon: int,
-                        jobs: list[Job], cluster: ClusterConfig) -> None: ...
-
-    def decide(self, t: int, active: list[ActiveJob], ci: CarbonService,
-               cluster: ClusterConfig) -> tuple[int, dict[int, int]]: ...
-
-    def on_completion(self, t: int, job: ActiveJob, violated: bool) -> None: ...
 
 
 # --- packed job tables ------------------------------------------------------

@@ -1,0 +1,39 @@
+"""repro.experiment — the declarative experiment API for CarbonFlex.
+
+The single public entry point for running the paper's pipeline:
+
+- ``registry``   — ``register_policy`` / ``PolicySpec`` / ``make_policy``:
+                   all nine §6 policies behind deferred constructors that
+                   receive runtime context (knowledge base, job history,
+                   mean length, oracle backend) from the driver;
+- ``Scenario``   — a declarative experiment point (region, trace family,
+                   capacity, seed, weeks, queue scaling, fault model) with
+                   ``materialize()`` resolving to (cluster, ci, jobs,
+                   hist/eval splits);
+- ``run``        — the continuous-learning driver (§4.2): weekly oracle
+                   replay into a rolling KnowledgeBase, policy
+                   construction via the registry, batched evaluation
+                   through ``simulate_many``;
+- ``Sweep``      — cartesian (regions x seeds x faults x policies) grids
+                   dispatched as one ``simulate_many`` batch, aggregated
+                   by ``SweepResult`` (savings vs a named baseline,
+                   dispersion, JSON round-trip).
+
+Quickstart::
+
+    from repro.experiment import Scenario, Sweep, run
+
+    print(run(Scenario(region="california", capacity=40)).table())
+
+    sweep = Sweep(base=Scenario(capacity=40),
+                  regions=["california", "ontario"], seeds=[1, 2],
+                  policies=["carbon-agnostic", "wait-awhile", "carbonflex",
+                            "oracle"])
+    print(sweep.run().table())
+"""
+from . import registry  # noqa: F401
+from .driver import DEFAULT_POLICIES, ExperimentResult, prepare_context, run  # noqa: F401
+from .registry import (PolicyContext, PolicySpec, available_policies,  # noqa: F401
+                       make_policy, register_policy)
+from .scenario import WEEK, MaterializedScenario, Scenario  # noqa: F401
+from .sweep import Sweep, SweepResult  # noqa: F401

@@ -1,0 +1,201 @@
+"""The experiment driver: one call from ``Scenario`` to per-policy results.
+
+``run()`` owns the continuous-learning loop of §4.2 that the examples used
+to copy-paste: replay the historical weeks through the offline oracle into
+a rolling :class:`KnowledgeBase` (one replay offset per week), construct
+every requested policy through the registry, evaluate each week through
+``simulate_many`` (one batched dispatch per week, jobs packed once), then
+re-learn on the week just evaluated and warm-start history-driven policies
+before the next — the violation-feedback loop of Algorithm 2 running
+inside the policies across the whole span.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.knowledge import KnowledgeBase
+from repro.core.policy import learn_window
+from repro.core.simulator import SimCase, simulate_many
+from repro.core.types import SimResult
+
+from .registry import PolicyContext, get_spec, make_policy, needs_kb
+from .scenario import WEEK, MaterializedScenario, Scenario
+
+#: The §6.1 comparison set (VCC joins only in the Fig. 14 interop study).
+DEFAULT_POLICIES: tuple[str, ...] = (
+    "carbon-agnostic", "gaia", "wait-awhile", "carbonscaler",
+    "carbonflex", "carbonflex-mpc", "oracle",
+)
+
+
+def prepare_context(
+    mat: MaterializedScenario,
+    policies: Sequence[str],
+    kb_kwargs: dict | None = None,
+    backend: str = "numpy",
+) -> PolicyContext:
+    """Build the :class:`PolicyContext` for a materialized scenario,
+    running the initial learning phase when any requested policy needs the
+    knowledge base."""
+    kb = None
+    if needs_kb(policies):
+        kb = KnowledgeBase(**(kb_kwargs or {}))
+        learn_window(kb, mat.hist, mat.ci, 0, WEEK, mat.cluster,
+                     offsets=mat.scenario.learn_offsets(), backend=backend)
+    return PolicyContext(
+        cluster=mat.cluster, ci=mat.ci, history=list(mat.hist),
+        mean_length=mat.mean_length, utilization=mat.scenario.utilization,
+        kb=kb, backend=backend)
+
+
+def _fresh_faults(scenario: Scenario):
+    """Fault injection is stateful (seeded RNG stream) — every simulation
+    case gets its own instance reset to the configured seed."""
+    if scenario.faults is None:
+        return None
+    return dataclasses.replace(scenario.faults)
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    """Per-policy results of one scenario run (one ``SimResult`` per
+    evaluated week, aggregates over the whole span)."""
+
+    scenario: Scenario
+    policies: tuple[str, ...]
+    weekly: dict[str, list[SimResult]]
+    kb_size: int
+    runtime_s: float
+
+    # --- aggregates ---------------------------------------------------------
+
+    def carbon_g(self, policy: str) -> float:
+        return float(sum(r.carbon_g for r in self.weekly[policy]))
+
+    def energy_kwh(self, policy: str) -> float:
+        return float(sum(r.energy_kwh for r in self.weekly[policy]))
+
+    def mean_wait(self, policy: str) -> float:
+        waits = np.concatenate([r.wait_slots for r in self.weekly[policy]]) \
+            if self.weekly[policy] else np.zeros(0)
+        return float(waits.mean()) if len(waits) else 0.0
+
+    def violation_rate(self, policy: str) -> float:
+        v = np.concatenate([r.violations for r in self.weekly[policy]]) \
+            if self.weekly[policy] else np.zeros(0, dtype=bool)
+        return float(v.mean()) if len(v) else 0.0
+
+    def savings(self, policy: str, baseline: str = "carbon-agnostic") -> float:
+        """Carbon savings (%) of ``policy`` vs ``baseline`` in this run."""
+        base = self.carbon_g(baseline)
+        if base <= 0:
+            return 0.0
+        return 100.0 * (1.0 - self.carbon_g(policy) / base)
+
+    # --- presentation / serialization ---------------------------------------
+
+    def _baseline(self, baseline: str | None) -> str | None:
+        if baseline is not None:
+            return baseline if baseline in self.weekly else None
+        return "carbon-agnostic" if "carbon-agnostic" in self.weekly else None
+
+    def metrics(self, baseline: str | None = None) -> dict[str, dict]:
+        """Per-policy metric dicts (the shape the figure benchmarks cache)."""
+        base = self._baseline(baseline)
+        out = {}
+        for name in self.policies:
+            m = {
+                "carbon_g": self.carbon_g(name),
+                "energy_kwh": self.energy_kwh(name),
+                "mean_wait_h": self.mean_wait(name),
+                "violation_rate": self.violation_rate(name),
+            }
+            if base:
+                m["savings_pct"] = round(self.savings(name, base), 2)
+            out[name] = m
+        return out
+
+    def table(self, baseline: str | None = None) -> str:
+        """Human-readable comparison table (the quickstart report)."""
+        base = self._baseline(baseline)
+        lines = [f"{'policy':18s} {'carbon kg':>10s} {'savings':>8s} "
+                 f"{'wait h':>7s} {'viol':>6s}"]
+        for name in self.policies:
+            sv = f"{self.savings(name, base):7.1f}%" if base else " " * 8
+            lines.append(
+                f"{name:18s} {self.carbon_g(name) / 1e3:10.1f} {sv} "
+                f"{self.mean_wait(name):7.1f} {self.violation_rate(name):6.3f}")
+        return "\n".join(lines)
+
+    def to_dict(self, baseline: str | None = None) -> dict:
+        return {
+            "scenario": self.scenario.to_dict(),
+            "kb_size": self.kb_size,
+            "runtime_s": round(self.runtime_s, 3),
+            "policies": self.metrics(baseline),
+        }
+
+
+def run(
+    scenario: Scenario,
+    policies: Sequence[str] | None = None,
+    *,
+    kb_kwargs: dict | None = None,
+    backend: str = "numpy",
+    progress: Callable[[str], None] | None = None,
+) -> ExperimentResult:
+    """Run ``scenario`` under the named policies (registry names).
+
+    Evaluation week by week: simulate all policies on the week's arrivals
+    (one ``simulate_many`` dispatch — the week's jobs are packed once and
+    shared across policies), then fold the week back into the learning
+    state for the next (rolling KB window + MPC history warm start).
+    ``kb_kwargs`` forwards to :class:`KnowledgeBase` (e.g. ``max_windows``
+    for the aging window, feature weights for tuning studies).
+    """
+    names = tuple(policies if policies is not None else DEFAULT_POLICIES)
+    t_start = time.perf_counter()
+    mat = scenario.materialize()
+    ctx = prepare_context(mat, names, kb_kwargs=kb_kwargs, backend=backend)
+    instances = {n: make_policy(n, ctx) for n in names}
+    weekly: dict[str, list[SimResult]] = {n: [] for n in names}
+
+    for w in range(scenario.eval_weeks):
+        t0 = mat.t0 + w * WEEK
+        if w > 0:
+            # continuous learning: replay the week just evaluated
+            prev = [j for j in mat.jobs if t0 - WEEK <= j.arrival < t0]
+            if ctx.kb is not None:
+                learn_window(ctx.kb, mat.jobs, mat.ci, 0, WEEK, mat.cluster,
+                             offsets=(t0 - WEEK,), backend=backend)
+            for n in names:
+                if get_spec(n).needs_history and prev:
+                    instances[n].warm_start(prev)
+        ev = mat.eval_week(w)
+        if not ev:
+            continue
+        cases = [SimCase(jobs=ev, ci=mat.ci, cluster=mat.cluster,
+                         policy=instances[n], t0=t0, horizon=WEEK,
+                         faults=_fresh_faults(scenario), label=n)
+                 for n in names]
+        for n, res in zip(names, simulate_many(cases)):
+            weekly[n].append(res)
+        if progress is not None:
+            agg = {n: sum(r.carbon_g for r in weekly[n]) for n in names}
+            base = agg.get("carbon-agnostic")
+            parts = [f"week {w + 1}/{scenario.eval_weeks}"]
+            if ctx.kb is not None:
+                parts.append(f"kb={len(ctx.kb)} cases")
+            if base:
+                parts += [f"{n}={100 * (1 - c / base):.1f}%"
+                          for n, c in agg.items() if n != "carbon-agnostic"]
+            progress("  ".join(parts))
+
+    return ExperimentResult(
+        scenario=scenario, policies=names, weekly=weekly,
+        kb_size=len(ctx.kb) if ctx.kb is not None else 0,
+        runtime_s=time.perf_counter() - t_start)

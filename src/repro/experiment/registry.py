@@ -1,0 +1,158 @@
+"""Policy registry: names -> deferred policy constructors.
+
+Every policy in the paper's evaluation (§6.1, §6.7) plus the beyond-paper
+MPC variant registers here.  Construction is *deferred*: a builder receives
+a :class:`PolicyContext` carrying the runtime objects policies need — the
+learned :class:`KnowledgeBase` for CarbonFlex, the completed-job history
+for the MPC warm start, the mean historical length the paper grants every
+baseline, the oracle backend — so drivers resolve ``"carbonflex"`` to a
+ready instance instead of hand-wiring each constructor.
+
+Register additional policies with :func:`register_policy`::
+
+    @register_policy("my-policy", description="...")
+    def _build(ctx: PolicyContext) -> Policy:
+        return MyPolicy(...)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.core import baselines
+from repro.core.carbon import CarbonService
+from repro.core.knowledge import KnowledgeBase
+from repro.core.policy import (CarbonFlexMPCPolicy, CarbonFlexPolicy,
+                               OraclePolicy, Policy)
+from repro.core.types import ClusterConfig, Job
+
+
+@dataclasses.dataclass
+class PolicyContext:
+    """Runtime context handed to deferred policy builders."""
+
+    cluster: ClusterConfig
+    ci: CarbonService
+    history: list[Job] = dataclasses.field(default_factory=list)
+    mean_length: float = 4.0
+    utilization: float = 0.5
+    kb: KnowledgeBase | None = None
+    backend: str = "numpy"           # oracle backend for oracle/learning
+
+    def require_kb(self) -> KnowledgeBase:
+        if self.kb is None:
+            raise ValueError("policy requires a learned KnowledgeBase; "
+                             "the driver must run the learning phase first")
+        return self.kb
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicySpec:
+    """A registered policy: display name, builder, and the context it needs
+    (drivers use the flags to decide what to prepare)."""
+
+    name: str
+    builder: Callable[[PolicyContext], Policy]
+    needs_kb: bool = False
+    needs_history: bool = False
+    description: str = ""
+
+
+REGISTRY: dict[str, PolicySpec] = {}
+
+
+def register_policy(name: str, *, needs_kb: bool = False,
+                    needs_history: bool = False, description: str = ""):
+    """Decorator registering a ``PolicyContext -> Policy`` builder."""
+
+    def deco(builder: Callable[[PolicyContext], Policy]):
+        if name in REGISTRY:
+            raise ValueError(f"policy {name!r} is already registered")
+        REGISTRY[name] = PolicySpec(name=name, builder=builder,
+                                    needs_kb=needs_kb,
+                                    needs_history=needs_history,
+                                    description=description)
+        return builder
+
+    return deco
+
+
+def get_spec(name: str) -> PolicySpec:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown policy {name!r}; registered policies: "
+                         f"{', '.join(sorted(REGISTRY))}") from None
+
+
+def make_policy(name: str, ctx: PolicyContext) -> Policy:
+    """Construct a fresh policy instance (policies are stateful — one
+    instance per simulation case)."""
+    return get_spec(name).builder(ctx)
+
+
+def available_policies() -> tuple[str, ...]:
+    return tuple(REGISTRY)
+
+
+def needs_kb(names) -> bool:
+    return any(get_spec(n).needs_kb for n in names)
+
+
+# --- the nine §6 policies ---------------------------------------------------
+
+
+@register_policy("carbon-agnostic",
+                 description="status quo: FCFS, run immediately, no elasticity")
+def _carbon_agnostic(ctx: PolicyContext) -> Policy:
+    return baselines.CarbonAgnosticPolicy()
+
+
+@register_policy("gaia",
+                 description="GAIA lowest-CI-window start-time selection")
+def _gaia(ctx: PolicyContext) -> Policy:
+    return baselines.GaiaPolicy(mean_length=ctx.mean_length)
+
+
+@register_policy("wait-awhile",
+                 description="suspend/resume on the 30th-percentile CI threshold")
+def _wait_awhile(ctx: PolicyContext) -> Policy:
+    return baselines.WaitAwhilePolicy()
+
+
+@register_policy("carbonscaler",
+                 description="per-job elastic CarbonScaler plans, cluster-reconciled")
+def _carbonscaler(ctx: PolicyContext) -> Policy:
+    return baselines.CarbonScalerPolicy(mean_length=ctx.mean_length)
+
+
+@register_policy("vcc", description="Google VCC capacity shaping, FCFS")
+def _vcc(ctx: PolicyContext) -> Policy:
+    return baselines.VCCPolicy(utilization=ctx.utilization)
+
+
+@register_policy("vcc-scaling",
+                 description="VCC capacity shaping + elastic filling")
+def _vcc_scaling(ctx: PolicyContext) -> Policy:
+    return baselines.VCCPolicy(scaling=True, utilization=ctx.utilization)
+
+
+@register_policy("carbonflex", needs_kb=True,
+                 description="CarbonFlex KNN execution phase (Algorithms 2+3)")
+def _carbonflex(ctx: PolicyContext) -> Policy:
+    return CarbonFlexPolicy(ctx.require_kb())
+
+
+@register_policy("carbonflex-mpc", needs_history=True,
+                 description="rolling-horizon re-solve of Algorithm 1 (beyond paper)")
+def _carbonflex_mpc(ctx: PolicyContext) -> Policy:
+    pol = CarbonFlexMPCPolicy()
+    if ctx.history:
+        pol.warm_start(ctx.history)
+    return pol
+
+
+@register_policy("oracle",
+                 description="Algorithm 1 with full future knowledge (upper bound)")
+def _oracle(ctx: PolicyContext) -> Policy:
+    return OraclePolicy(backend=ctx.backend)

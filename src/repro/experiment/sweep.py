@@ -1,0 +1,171 @@
+"""Cartesian experiment sweeps over ``simulate_many`` (Fig. 6-14 style).
+
+A :class:`Sweep` expands a grid — (regions x seeds x faults x policies)
+around a base :class:`Scenario` — into :class:`SimCase` s and dispatches
+them through ``simulate_many`` in a single batch: each scenario's jobs are
+materialized and packed exactly once (the pack cache keys on the job-list
+object, which ``Scenario.materialize`` keeps stable), and each scenario's
+knowledge base is learned exactly once and shared read-only across its
+policies and fault settings.
+
+:class:`SweepResult` aggregates the batch: per-case rows with carbon
+savings against a named baseline policy, per-policy summaries with
+cross-(region, seed) dispersion, and a JSON round-trip (``to_json`` /
+``from_json``) for benchmark caches and plotting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.simulator import FaultModel, SimCase, simulate_many
+from repro.core.types import SimResult
+
+from .driver import DEFAULT_POLICIES, _fresh_faults, prepare_context
+from .registry import make_policy
+from .scenario import WEEK, Scenario
+
+
+def fault_label(fm: FaultModel | None) -> str:
+    if fm is None:
+        return "none"
+    return f"straggler={fm.straggler_rate:g},failure={fm.failure_rate:g}"
+
+
+@dataclasses.dataclass
+class Sweep:
+    """A cartesian grid of scenarios x policies, run as one batch.
+
+    ``regions`` / ``seeds`` default to the base scenario's single values;
+    ``faults`` is an explicit fault axis (``None`` entry = fault-free) —
+    when omitted it defaults to the base scenario's own fault model.
+    ``baseline`` names the policy savings are measured against — it is
+    added to the run automatically if missing.
+
+    Unlike :func:`repro.experiment.run`, a sweep evaluates each scenario
+    as a *single* window of ``eval_weeks`` weeks against the initially
+    learned knowledge base — the weekly §4.2 re-learning loop is the
+    driver's job; use ``run()`` per scenario when that is the semantics
+    under study.
+    """
+
+    base: Scenario = dataclasses.field(default_factory=Scenario)
+    regions: Sequence[str] = ()
+    seeds: Sequence[int] = ()
+    policies: Sequence[str] = DEFAULT_POLICIES
+    faults: Sequence[FaultModel | None] | None = None
+    baseline: str = "carbon-agnostic"
+    backend: str = "numpy"
+    kb_kwargs: dict | None = None
+
+    def fault_axis(self) -> tuple[FaultModel | None, ...]:
+        if self.faults is None:
+            return (self.base.faults,)
+        return tuple(self.faults)
+
+    def scenarios(self) -> list[Scenario]:
+        regions = tuple(self.regions) or (self.base.region,)
+        seeds = tuple(self.seeds) or (self.base.seed,)
+        return [dataclasses.replace(self.base, region=r, seed=s)
+                for r in regions for s in seeds]
+
+    def _policy_names(self) -> tuple[str, ...]:
+        names = tuple(self.policies)
+        if self.baseline not in names:
+            names = (self.baseline,) + names
+        return names
+
+    def run(self, progress: Callable[[str], None] | None = None) -> "SweepResult":
+        names = self._policy_names()
+        cases: list[SimCase] = []
+        meta: list[dict] = []
+        for sc in self.scenarios():
+            mat = sc.materialize()
+            ctx = prepare_context(mat, names, kb_kwargs=self.kb_kwargs,
+                                  backend=self.backend)
+            if progress is not None:
+                progress(f"prepared {sc.region}/seed{sc.seed}: "
+                         f"{len(mat.eval_jobs)} eval jobs"
+                         + (f", kb={len(ctx.kb)}" if ctx.kb is not None else ""))
+            horizon = sc.eval_weeks * WEEK
+            for fm in self.fault_axis():
+                scf = dataclasses.replace(sc, faults=fm)
+                for name in names:
+                    cases.append(SimCase(
+                        jobs=mat.eval_jobs, ci=mat.ci, cluster=mat.cluster,
+                        policy=make_policy(name, ctx), t0=mat.t0,
+                        horizon=horizon, faults=_fresh_faults(scf),
+                        label=f"{sc.region}/s{sc.seed}/{fault_label(fm)}/{name}"))
+                    meta.append({"region": sc.region, "seed": sc.seed,
+                                 "fault": fault_label(fm), "policy": name})
+        results = simulate_many(cases)       # one batched dispatch
+        rows = []
+        for m, r in zip(meta, results):
+            rows.append({**m, **r.to_dict()})
+        _attach_savings(rows, self.baseline)
+        return SweepResult(baseline=self.baseline, rows_=rows,
+                           results=results)
+
+
+def _attach_savings(rows: list[dict], baseline: str) -> None:
+    base_carbon = {(r["region"], r["seed"], r["fault"]): r["carbon_g"]
+                   for r in rows if r["policy"] == baseline}
+    for r in rows:
+        base = base_carbon.get((r["region"], r["seed"], r["fault"]), 0.0)
+        r["savings_pct"] = round(100.0 * (1.0 - r["carbon_g"] / base), 3) \
+            if base > 0 else 0.0
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Flat per-case rows + per-policy aggregates of one sweep batch.
+
+    ``results`` holds the in-memory ``SimResult`` objects for the run that
+    produced this (dropped by the JSON round-trip — rows carry everything
+    the figures need)."""
+
+    baseline: str
+    rows_: list[dict]
+    results: list[SimResult] | None = None
+
+    def rows(self) -> list[dict]:
+        return self.rows_
+
+    def summary(self) -> dict[str, dict]:
+        """Per-policy aggregates with cross-(region, seed, fault)
+        dispersion of the savings."""
+        out: dict[str, dict] = {}
+        for name in dict.fromkeys(r["policy"] for r in self.rows_):
+            rs = [r for r in self.rows_ if r["policy"] == name]
+            sv = np.array([r["savings_pct"] for r in rs])
+            out[name] = {
+                "n_cases": len(rs),
+                "savings_mean_pct": round(float(sv.mean()), 3),
+                "savings_std_pct": round(float(sv.std()), 3),
+                "savings_min_pct": round(float(sv.min()), 3),
+                "savings_max_pct": round(float(sv.max()), 3),
+                "mean_wait_h": round(float(np.mean([r["mean_wait"] for r in rs])), 3),
+                "violation_rate": round(float(np.mean([r["violation_rate"] for r in rs])), 4),
+            }
+        return out
+
+    def table(self) -> str:
+        lines = [f"{'policy':18s} {'savings%':>9s} {'±std':>6s} "
+                 f"{'wait h':>7s} {'viol':>6s} {'cases':>6s}"]
+        for name, s in self.summary().items():
+            lines.append(f"{name:18s} {s['savings_mean_pct']:9.2f} "
+                         f"{s['savings_std_pct']:6.2f} {s['mean_wait_h']:7.1f} "
+                         f"{s['violation_rate']:6.3f} {s['n_cases']:6d}")
+        return "\n".join(lines)
+
+    def to_json(self, indent: int | None = 1) -> str:
+        return json.dumps({"baseline": self.baseline, "rows": self.rows_,
+                           "summary": self.summary()}, indent=indent)
+
+    @classmethod
+    def from_json(cls, payload: str) -> "SweepResult":
+        d = json.loads(payload)
+        return cls(baseline=d["baseline"], rows_=d["rows"])

@@ -29,7 +29,7 @@ def world():
     hist = [j for j in jobs if j.arrival < WEEK]
     ev = [j for j in jobs if WEEK <= j.arrival < WEEK * 2]
     kb = KnowledgeBase()
-    learn_window(kb, hist, ci, 0, WEEK, CAP, 3, backend="numpy")
+    learn_window(kb, hist, ci, 0, WEEK, cluster, backend="numpy")
     return cluster, ci, hist, ev, kb
 
 

@@ -36,7 +36,7 @@ def test_oracle_beats_agnostic(world):
 def test_carbonflex_knn_pipeline(world):
     cluster, ci, spec, jobs, hist, ev, base = world
     kb = KnowledgeBase()
-    learn_window(kb, hist, ci, 0, WEEK, CAP, 3, offsets=(0, WEEK), backend="numpy")
+    learn_window(kb, hist, ci, 0, WEEK, cluster, offsets=(0, WEEK), backend="numpy")
     assert len(kb) == 2 * WEEK
     r = simulate(ev, ci, cluster, CarbonFlexPolicy(kb), t0=WEEK * 2, horizon=WEEK)
     # learned policy must clearly beat carbon-agnostic
