@@ -15,7 +15,10 @@ perf trajectory is tracked across PRs:
 - ``combined_learn_execute`` — the §6 pipeline (learning windows + one
                       evaluation week of simulate with per-slot KB queries),
                       seed configuration vs new.  This is the ISSUE-1
-                      acceptance metric (>= 10x).
+                      acceptance metric (>= 10x);
+- ``geo``           — the multi-region engine (region-axis state vectors):
+                      scalar reference vs vectorised path on a 2-region
+                      geo-flex week, parity asserted while timing.
 
 The seed configuration is reconstructed faithfully: the loop-based entry
 builder and the retry loop without the futile-extension early exit live in
@@ -221,6 +224,36 @@ def bench_combined(cluster, ci, hist, ev, t0, offsets) -> dict:
     }
 
 
+def bench_geo(full: bool = False) -> dict:
+    """Multi-region engine: scalar reference vs the region-axis vector
+    path, one evaluation week of each geo policy on a 2-region world."""
+    from repro.experiment import make_policy, prepare_context
+
+    sc = Scenario(regions=("south-australia", "california"),
+                  capacity=150 if full else 60, learn_weeks=1, seed=7)
+    mat = sc.materialize()
+    names = ("geo-static", "geo-greedy", "geo-flex")
+    ctx = prepare_context(mat, names)
+    out = {}
+    for name in names:
+        mk = lambda n=name: make_policy(n, ctx)  # noqa: E731
+        simulate(mat.eval_jobs, mat.mci, mat.geo, mk(), t0=mat.t0,
+                 horizon=WEEK)                   # warm the pack cache
+        t_s, rs = _timed(lambda m=mk: simulate(mat.eval_jobs, mat.mci,
+                                               mat.geo, m(), t0=mat.t0,
+                                               horizon=WEEK, engine="scalar"))
+        t_v, rv = _timed(lambda m=mk: simulate(mat.eval_jobs, mat.mci,
+                                               mat.geo, m(), t0=mat.t0,
+                                               horizon=WEEK, engine="vector"))
+        assert rs.carbon_g == rv.carbon_g        # parity while we are here
+        out[name] = {"scalar_s": round(t_s, 3), "vector_s": round(t_v, 4),
+                     "speedup": round(t_s / t_v, 1),
+                     "migrations": int(rv.migrations)}
+    out["eval_jobs"] = len(mat.eval_jobs)
+    out["regions"] = list(sc.regions)
+    return out
+
+
 def run_all(full: bool = False) -> dict:
     cluster, ci, hist, ev, t0, offsets = _scenario(full)
     res = {
@@ -232,6 +265,7 @@ def run_all(full: bool = False) -> dict:
         "simulate": bench_simulate(cluster, ci, hist, ev, t0, offsets),
         "combined_learn_execute": bench_combined(cluster, ci, hist, ev, t0,
                                                  offsets),
+        "geo": bench_geo(full),
     }
     return res
 
@@ -252,6 +286,11 @@ def csv_rows(res: dict) -> list[str]:
         if isinstance(d, dict):
             rows.append(f"bench_engine/simulate/{pol},{d['vector_s'] * 1e6:.0f},"
                         f"speedup={d['speedup']}x;scalar_s={d['scalar_s']}")
+    for pol, d in res["geo"].items():
+        if isinstance(d, dict):
+            rows.append(f"bench_engine/geo/{pol},{d['vector_s'] * 1e6:.0f},"
+                        f"speedup={d['speedup']}x;scalar_s={d['scalar_s']}"
+                        f";migrations={d['migrations']}")
     return rows
 
 

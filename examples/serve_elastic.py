@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCHS, reduced
+from repro.launch.mesh import make_mesh
 from repro.models import LogicalRules, forward, init_params
 from repro.serve import init_cache, make_prefill, make_serve_step
 
@@ -33,8 +34,7 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = reduced(ARCHS[args.arch])
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     rules = LogicalRules(mesh)
     params = init_params(cfg, jax.random.key(0))
     max_seq = args.prompt_len + args.tokens

@@ -16,14 +16,20 @@ Public surface:
 - ``baselines``                    — §6 baselines (agnostic/GAIA/WaitAwhile/
                                      CarbonScaler/VCC)
 - ``policy.Policy``                — the protocol every policy implements
+- ``geo``                          — geo-distributed placement policies
+                                     (``geo-static``/``geo-greedy``/
+                                     ``geo-flex``) over ``GeoCluster`` +
+                                     ``MultiRegionCarbonService`` worlds
 
 The declarative experiment layer (policy registry, ``Scenario``, ``run``,
 ``Sweep``) lives one level up in ``repro.experiment``.
 """
-from . import baselines, carbon, emissions, knowledge, oracle, policy, profiles, provisioning, scheduling, simulator, types  # noqa: F401
-from .carbon import CarbonService, synthesize_trace  # noqa: F401
+from . import baselines, carbon, emissions, geo, knowledge, oracle, policy, profiles, provisioning, scheduling, simulator, types  # noqa: F401
+from .carbon import CarbonService, MultiRegionCarbonService, synthesize_trace  # noqa: F401
+from .geo import GeoFlexPolicy, GeoGreedyPolicy, GeoPolicy, GeoStaticPolicy  # noqa: F401
 from .knowledge import KnowledgeBase  # noqa: F401
 from .policy import (CarbonFlexPolicy, LearnOutcome, OraclePolicy, Policy,  # noqa: F401
                      learn_window)
 from .simulator import FaultModel, SimCase, simulate, simulate_many  # noqa: F401
-from .types import ClusterConfig, Job, QueueConfig, SimResult  # noqa: F401
+from .types import (ClusterConfig, GeoCluster, Job, MigrationModel,  # noqa: F401
+                    QueueConfig, SimResult)

@@ -136,3 +136,82 @@ class CarbonService:
     def percentile_threshold(self, t: int, pct: float) -> float:
         """The pct-th percentile of the next-24h forecast (Wait-Awhile)."""
         return float(np.percentile(self.forecast(t), pct))
+
+
+@dataclasses.dataclass
+class MultiRegionCarbonService:
+    """Aligned per-region CI traces + forecasts for geo-distributed runs.
+
+    Wraps one :class:`CarbonService` per region over traces of identical
+    length and slot alignment (slot ``t`` is the same wall-clock hour in
+    every region), so a geo policy can compare regions at a glance:
+    ``ci_vec(t)`` is the current CI across regions, ``rank_vec(t)`` the
+    Table-2 day-ahead rank feature per region, ``cleanest(t)`` the index
+    of the currently lowest-CI region.
+    """
+
+    regions: tuple[str, ...]
+    services: tuple[CarbonService, ...]
+
+    def __post_init__(self) -> None:
+        self.regions = tuple(self.regions)
+        self.services = tuple(self.services)
+        if not self.regions:
+            raise ValueError("MultiRegionCarbonService needs >= 1 region")
+        if len(self.regions) != len(self.services):
+            raise ValueError("regions and services must align")
+        if len(set(self.regions)) != len(self.regions):
+            raise ValueError(f"duplicate regions: {self.regions}")
+        lengths = {len(s) for s in self.services}
+        if len(lengths) != 1:
+            raise ValueError(f"per-region traces must have equal length, "
+                             f"got {sorted(lengths)}")
+
+    @classmethod
+    def synthetic(cls, regions, hours: int, seed: int = 0,
+                  **kw) -> "MultiRegionCarbonService":
+        """Seeded aligned synthetic traces (one ``synthesize_trace`` per
+        region; the shared ``seed`` keeps the worlds reproducible while the
+        per-region CRC stream keeps the traces distinct)."""
+        return cls(tuple(regions),
+                   tuple(CarbonService.synthetic(r, hours, seed=seed, **kw)
+                         for r in regions))
+
+    @property
+    def n_regions(self) -> int:
+        return len(self.regions)
+
+    def __len__(self) -> int:
+        return len(self.services[0])
+
+    def index(self, region: str) -> int:
+        try:
+            return self.regions.index(region)
+        except ValueError:
+            raise ValueError(f"unknown region {region!r}; this service "
+                             f"covers: {', '.join(self.regions)}") from None
+
+    def service(self, region: int | str) -> CarbonService:
+        if isinstance(region, str):
+            region = self.index(region)
+        return self.services[region]
+
+    def ci(self, t: int, region: int | str = 0) -> float:
+        """Single-region CI accessor (defaults to region 0 so existing
+        single-region code paths can read a geo service unambiguously)."""
+        return self.service(region).ci(t)
+
+    def ci_vec(self, t: int) -> np.ndarray:
+        return np.array([s.ci(t) for s in self.services])
+
+    def forecast_matrix(self, t: int, horizon: int | None = None) -> np.ndarray:
+        """(n_regions, horizon) day-ahead forecast block at slot t."""
+        return np.stack([s.forecast(t, horizon) for s in self.services])
+
+    def rank_vec(self, t: int) -> np.ndarray:
+        """Per-region day-ahead rank of slot t (1.0 = region's best slot)."""
+        return np.array([s.rank(t) for s in self.services])
+
+    def cleanest(self, t: int) -> int:
+        """Index of the currently lowest-CI region (ties -> lowest index)."""
+        return int(np.argmin(self.ci_vec(t)))

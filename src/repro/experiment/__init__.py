@@ -32,7 +32,8 @@ Quickstart::
     print(sweep.run().table())
 """
 from . import registry  # noqa: F401
-from .driver import DEFAULT_POLICIES, ExperimentResult, prepare_context, run  # noqa: F401
+from .driver import (DEFAULT_GEO_POLICIES, DEFAULT_POLICIES,  # noqa: F401
+                     ExperimentResult, prepare_context, run)
 from .registry import (PolicyContext, PolicySpec, available_policies,  # noqa: F401
                        make_policy, register_policy)
 from .scenario import WEEK, MaterializedScenario, Scenario  # noqa: F401

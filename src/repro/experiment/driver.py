@@ -22,13 +22,19 @@ from repro.core.policy import learn_window
 from repro.core.simulator import SimCase, simulate_many
 from repro.core.types import SimResult
 
-from .registry import PolicyContext, get_spec, make_policy, needs_kb
+from .registry import (PolicyContext, check_scenario_policies, get_spec,
+                       make_policy, needs_kb)
 from .scenario import WEEK, MaterializedScenario, Scenario
 
 #: The §6.1 comparison set (VCC joins only in the Fig. 14 interop study).
 DEFAULT_POLICIES: tuple[str, ...] = (
     "carbon-agnostic", "gaia", "wait-awhile", "carbonscaler",
     "carbonflex", "carbonflex-mpc", "oracle",
+)
+
+#: The geo-distributed comparison set (scenarios with a ``regions`` axis).
+DEFAULT_GEO_POLICIES: tuple[str, ...] = (
+    "geo-static", "geo-greedy", "geo-flex",
 )
 
 
@@ -49,7 +55,7 @@ def prepare_context(
     return PolicyContext(
         cluster=mat.cluster, ci=mat.ci, history=list(mat.hist),
         mean_length=mat.mean_length, utilization=mat.scenario.utilization,
-        kb=kb, backend=backend)
+        kb=kb, backend=backend, mci=mat.mci, geo=mat.geo)
 
 
 def _fresh_faults(scenario: Scenario):
@@ -89,8 +95,12 @@ class ExperimentResult:
             if self.weekly[policy] else np.zeros(0, dtype=bool)
         return float(v.mean()) if len(v) else 0.0
 
-    def savings(self, policy: str, baseline: str = "carbon-agnostic") -> float:
-        """Carbon savings (%) of ``policy`` vs ``baseline`` in this run."""
+    def savings(self, policy: str, baseline: str | None = None) -> float:
+        """Carbon savings (%) of ``policy`` vs ``baseline`` in this run
+        (default: carbon-agnostic, or geo-static on geo runs)."""
+        baseline = self._baseline(baseline)
+        if baseline is None:
+            return 0.0
         base = self.carbon_g(baseline)
         if base <= 0:
             return 0.0
@@ -99,9 +109,20 @@ class ExperimentResult:
     # --- presentation / serialization ---------------------------------------
 
     def _baseline(self, baseline: str | None) -> str | None:
+        """Resolve the comparison baseline: an explicit name must be part
+        of the run (typos raise, consistently across savings/metrics/
+        table); the default falls back to the status-quo policy of the
+        run's kind, or None when neither ran."""
         if baseline is not None:
-            return baseline if baseline in self.weekly else None
-        return "carbon-agnostic" if "carbon-agnostic" in self.weekly else None
+            if baseline not in self.weekly:
+                raise KeyError(
+                    f"baseline {baseline!r} was not part of this run; "
+                    f"policies: {', '.join(self.weekly)}")
+            return baseline
+        for cand in ("carbon-agnostic", "geo-static"):
+            if cand in self.weekly:
+                return cand
+        return None
 
     def metrics(self, baseline: str | None = None) -> dict[str, dict]:
         """Per-policy metric dicts (the shape the figure benchmarks cache)."""
@@ -157,7 +178,10 @@ def run(
     ``kb_kwargs`` forwards to :class:`KnowledgeBase` (e.g. ``max_windows``
     for the aging window, feature weights for tuning studies).
     """
-    names = tuple(policies if policies is not None else DEFAULT_POLICIES)
+    if policies is None:
+        policies = DEFAULT_GEO_POLICIES if scenario.is_geo else DEFAULT_POLICIES
+    names = tuple(policies)
+    check_scenario_policies(names, scenario.is_geo)
     t_start = time.perf_counter()
     mat = scenario.materialize()
     ctx = prepare_context(mat, names, kb_kwargs=kb_kwargs, backend=backend)
@@ -178,7 +202,9 @@ def run(
         ev = mat.eval_week(w)
         if not ev:
             continue
-        cases = [SimCase(jobs=ev, ci=mat.ci, cluster=mat.cluster,
+        ci_w = mat.mci if mat.is_geo else mat.ci
+        cluster_w = mat.geo if mat.is_geo else mat.cluster
+        cases = [SimCase(jobs=ev, ci=ci_w, cluster=cluster_w,
                          policy=instances[n], t0=t0, horizon=WEEK,
                          faults=_fresh_faults(scenario), label=n)
                  for n in names]

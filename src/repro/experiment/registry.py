@@ -20,11 +20,12 @@ import dataclasses
 from typing import Callable
 
 from repro.core import baselines
-from repro.core.carbon import CarbonService
+from repro.core.carbon import CarbonService, MultiRegionCarbonService
+from repro.core.geo import GeoFlexPolicy, GeoGreedyPolicy, GeoStaticPolicy
 from repro.core.knowledge import KnowledgeBase
 from repro.core.policy import (CarbonFlexMPCPolicy, CarbonFlexPolicy,
                                OraclePolicy, Policy)
-from repro.core.types import ClusterConfig, Job
+from repro.core.types import ClusterConfig, GeoCluster, Job
 
 
 @dataclasses.dataclass
@@ -38,6 +39,9 @@ class PolicyContext:
     utilization: float = 0.5
     kb: KnowledgeBase | None = None
     backend: str = "numpy"           # oracle backend for oracle/learning
+    # Geo-scenario context (None for single-region scenarios).
+    mci: MultiRegionCarbonService | None = None
+    geo: GeoCluster | None = None
 
     def require_kb(self) -> KnowledgeBase:
         if self.kb is None:
@@ -55,6 +59,7 @@ class PolicySpec:
     builder: Callable[[PolicyContext], Policy]
     needs_kb: bool = False
     needs_history: bool = False
+    geo: bool = False                # runs on GeoCluster scenarios only
     description: str = ""
 
 
@@ -62,8 +67,13 @@ REGISTRY: dict[str, PolicySpec] = {}
 
 
 def register_policy(name: str, *, needs_kb: bool = False,
-                    needs_history: bool = False, description: str = ""):
-    """Decorator registering a ``PolicyContext -> Policy`` builder."""
+                    needs_history: bool = False, geo: bool = False,
+                    description: str = ""):
+    """Decorator registering a ``PolicyContext -> Policy`` builder.
+
+    ``geo=True`` marks a policy implementing the ``GeoPolicy`` protocol:
+    it runs only on scenarios with a ``regions`` axis (the driver/sweep
+    reject mixing geo and single-region policies in one scenario)."""
 
     def deco(builder: Callable[[PolicyContext], Policy]):
         if name in REGISTRY:
@@ -71,6 +81,7 @@ def register_policy(name: str, *, needs_kb: bool = False,
         REGISTRY[name] = PolicySpec(name=name, builder=builder,
                                     needs_kb=needs_kb,
                                     needs_history=needs_history,
+                                    geo=geo,
                                     description=description)
         return builder
 
@@ -97,6 +108,21 @@ def available_policies() -> tuple[str, ...]:
 
 def needs_kb(names) -> bool:
     return any(get_spec(n).needs_kb for n in names)
+
+
+def check_scenario_policies(names, is_geo: bool) -> None:
+    """Reject geo policies on single-region scenarios and vice versa."""
+    for n in names:
+        spec = get_spec(n)
+        if spec.geo and not is_geo:
+            raise ValueError(
+                f"policy {n!r} is geo-distributed; give the Scenario a "
+                f"regions axis (e.g. regions=('california', 'ontario'))")
+        if not spec.geo and is_geo:
+            raise ValueError(
+                f"policy {n!r} is single-region; a geo scenario runs geo "
+                f"policies (e.g. geo-static/geo-greedy/geo-flex) — drop "
+                f"Scenario.regions for single-region studies")
 
 
 # --- the nine §6 policies ---------------------------------------------------
@@ -156,3 +182,28 @@ def _carbonflex_mpc(ctx: PolicyContext) -> Policy:
                  description="Algorithm 1 with full future knowledge (upper bound)")
 def _oracle(ctx: PolicyContext) -> Policy:
     return OraclePolicy(backend=ctx.backend)
+
+
+# --- geo-distributed policies ------------------------------------------------
+
+
+@register_policy("geo-static", geo=True,
+                 description="jobs pinned to their arrival region, FCFS "
+                             "(the spatial status quo)")
+def _geo_static(ctx: PolicyContext) -> Policy:
+    return GeoStaticPolicy()
+
+
+@register_policy("geo-greedy", geo=True,
+                 description="admit each job to the currently cleanest "
+                             "region with free capacity; sticky placement")
+def _geo_greedy(ctx: PolicyContext) -> Policy:
+    return GeoGreedyPolicy()
+
+
+@register_policy("geo-flex", geo=True,
+                 description="per-region CI-rank suspend/resume + "
+                             "suspend-migrate-resume when the forecast gap "
+                             "beats the migration carbon cost")
+def _geo_flex(ctx: PolicyContext) -> Policy:
+    return GeoFlexPolicy()

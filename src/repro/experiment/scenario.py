@@ -14,9 +14,11 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.carbon import REGIONS, CarbonService
+from repro.core.carbon import (REGIONS, CarbonService,
+                               MultiRegionCarbonService)
 from repro.core.simulator import FaultModel
-from repro.core.types import ClusterConfig, Job, QueueConfig, default_queues
+from repro.core.types import (ClusterConfig, GeoCluster, Job, MigrationModel,
+                              QueueConfig, default_queues)
 from repro.traces import TraceSpec, generate_trace, mean_length
 
 WEEK = 24 * 7
@@ -38,6 +40,15 @@ class MaterializedScenario:
     eval_jobs: list[Job]         # arrivals in the evaluation weeks
     t0: int                      # first evaluation slot
     mean_length: float
+    # Geo-scenario extras (None for single-region scenarios).  ``ci`` then
+    # aliases the first region's service, anchoring single-region
+    # comparisons; ``cluster`` keeps the aggregate total capacity.
+    mci: MultiRegionCarbonService | None = None
+    geo: GeoCluster | None = None
+
+    @property
+    def is_geo(self) -> bool:
+        return self.geo is not None
 
     @property
     def ev(self) -> list[Job]:
@@ -59,9 +70,19 @@ class Scenario:
     ``eval_shift`` regenerates the evaluation weeks from a +/-shifted
     length/rate distribution (the Fig. 13 learning/execution mismatch)
     while the learning weeks keep the unshifted trace.
+
+    A non-empty ``regions`` tuple turns the scenario geo-distributed:
+    ``capacity`` is split evenly across the regions (remainder to the
+    first), aligned per-region CI traces are synthesized from the same
+    seed, and ``materialize()`` additionally yields the ``GeoCluster`` /
+    ``MultiRegionCarbonService`` pair the geo policies run on (``region``
+    is then ignored).  ``migration`` overrides the default
+    :class:`MigrationModel` cost knobs.
     """
 
     region: str = "south-australia"
+    regions: tuple[str, ...] = ()
+    migration: MigrationModel | None = None
     family: str = "azure"
     capacity: int = 60
     utilization: float = 0.5
@@ -78,11 +99,23 @@ class Scenario:
     faults: FaultModel | None = None    # default fault injection for runs
 
     def __post_init__(self) -> None:
+        object.__setattr__(self, "regions", tuple(self.regions))
         if self.region not in REGIONS:
             raise ValueError(f"unknown region {self.region!r}; available "
                              f"regions: {', '.join(sorted(REGIONS))}")
+        for r in self.regions:
+            if r not in REGIONS:
+                raise ValueError(f"unknown region {r!r}; available "
+                                 f"regions: {', '.join(sorted(REGIONS))}")
+        if self.regions and len(self.regions) < 2:
+            raise ValueError("a geo scenario needs >= 2 regions; use "
+                             "`region=` for single-region studies")
         if self.learn_weeks < 1 or self.eval_weeks < 1:
             raise ValueError("learn_weeks and eval_weeks must be >= 1")
+
+    @property
+    def is_geo(self) -> bool:
+        return bool(self.regions)
 
     # --- derived geometry ---------------------------------------------------
 
@@ -125,8 +158,18 @@ class Scenario:
         if cached is not None:
             return cached
         cluster = ClusterConfig(capacity=self.capacity, queues=self.queues())
-        ci = CarbonService.synthetic(self.region, self.hours + CI_MARGIN_HOURS,
-                                     seed=self.seed)
+        mci = geo = None
+        if self.is_geo:
+            mci = MultiRegionCarbonService.synthetic(
+                self.regions, self.hours + CI_MARGIN_HOURS, seed=self.seed)
+            geo = GeoCluster.split(self.capacity, self.regions,
+                                   queues=self.queues(),
+                                   migration=self.migration)
+            ci = mci.service(0)
+        else:
+            ci = CarbonService.synthetic(self.region,
+                                         self.hours + CI_MARGIN_HOURS,
+                                         seed=self.seed)
         spec = self.trace_spec()
         jobs = generate_trace(spec, cluster.queues)
         t0 = self.t0
@@ -141,7 +184,7 @@ class Scenario:
         mat = MaterializedScenario(
             scenario=self, cluster=cluster, ci=ci, spec=spec, jobs=jobs,
             hist=hist, eval_jobs=eval_jobs, t0=t0,
-            mean_length=mean_length(spec))
+            mean_length=mean_length(spec), mci=mci, geo=geo)
         object.__setattr__(self, "_materialized", mat)
         return mat
 
@@ -149,15 +192,21 @@ class Scenario:
 
     def to_dict(self) -> dict:
         d = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)}
+        d["regions"] = list(self.regions)
         if self.faults is not None:
             d["faults"] = {k: getattr(self.faults, k) for k in
                            ("straggler_rate", "straggler_slowdown",
                             "failure_rate", "seed")}
+        if self.migration is not None:
+            d["migration"] = dataclasses.asdict(self.migration)
         return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "Scenario":
         d = dict(d)
+        d["regions"] = tuple(d.get("regions", ()))
         if d.get("faults"):
             d["faults"] = FaultModel(**d["faults"])
+        if d.get("migration"):
+            d["migration"] = MigrationModel(**d["migration"])
         return cls(**d)

@@ -25,7 +25,7 @@ from repro.core.simulator import FaultModel, SimCase, simulate_many
 from repro.core.types import SimResult
 
 from .driver import DEFAULT_POLICIES, _fresh_faults, prepare_context
-from .registry import make_policy
+from .registry import check_scenario_policies, make_policy
 from .scenario import WEEK, Scenario
 
 
@@ -44,6 +44,13 @@ class Sweep:
     when omitted it defaults to the base scenario's own fault model.
     ``baseline`` names the policy savings are measured against — it is
     added to the run automatically if missing.
+
+    Geo sweeps: when the base scenario carries a ``regions`` tuple the
+    whole grid is geo-distributed — the sweep's own single-region
+    ``regions`` axis must stay empty (vary geo worlds via ``seeds`` or
+    several sweeps), the policies must be geo policies, and the default
+    baseline becomes ``geo-static``.  Row metadata joins the region tuple
+    as ``"a+b"``.
 
     Unlike :func:`repro.experiment.run`, a sweep evaluates each scenario
     as a *single* window of ``eval_weeks`` weeks against the initially
@@ -66,47 +73,66 @@ class Sweep:
             return (self.base.faults,)
         return tuple(self.faults)
 
+    def effective_baseline(self) -> str:
+        """``geo-static`` replaces the single-region default on geo grids."""
+        if self.base.is_geo and self.baseline == "carbon-agnostic":
+            return "geo-static"
+        return self.baseline
+
     def scenarios(self) -> list[Scenario]:
-        regions = tuple(self.regions) or (self.base.region,)
         seeds = tuple(self.seeds) or (self.base.seed,)
+        if self.base.is_geo:
+            if tuple(self.regions):
+                raise ValueError(
+                    "a geo base scenario fixes the region tuple; sweep the "
+                    "seeds axis (or run one sweep per region tuple) instead "
+                    "of the single-region regions axis")
+            return [dataclasses.replace(self.base, seed=s) for s in seeds]
+        regions = tuple(self.regions) or (self.base.region,)
         return [dataclasses.replace(self.base, region=r, seed=s)
                 for r in regions for s in seeds]
 
     def _policy_names(self) -> tuple[str, ...]:
         names = tuple(self.policies)
-        if self.baseline not in names:
-            names = (self.baseline,) + names
+        baseline = self.effective_baseline()
+        if baseline not in names:
+            names = (baseline,) + names
+        check_scenario_policies(names, self.base.is_geo)
         return names
 
     def run(self, progress: Callable[[str], None] | None = None) -> "SweepResult":
         names = self._policy_names()
+        baseline = self.effective_baseline()
         cases: list[SimCase] = []
         meta: list[dict] = []
         for sc in self.scenarios():
             mat = sc.materialize()
+            region_label = "+".join(sc.regions) if sc.is_geo else sc.region
             ctx = prepare_context(mat, names, kb_kwargs=self.kb_kwargs,
                                   backend=self.backend)
             if progress is not None:
-                progress(f"prepared {sc.region}/seed{sc.seed}: "
+                progress(f"prepared {region_label}/seed{sc.seed}: "
                          f"{len(mat.eval_jobs)} eval jobs"
                          + (f", kb={len(ctx.kb)}" if ctx.kb is not None else ""))
             horizon = sc.eval_weeks * WEEK
+            ci_c = mat.mci if mat.is_geo else mat.ci
+            cluster_c = mat.geo if mat.is_geo else mat.cluster
             for fm in self.fault_axis():
                 scf = dataclasses.replace(sc, faults=fm)
                 for name in names:
                     cases.append(SimCase(
-                        jobs=mat.eval_jobs, ci=mat.ci, cluster=mat.cluster,
+                        jobs=mat.eval_jobs, ci=ci_c, cluster=cluster_c,
                         policy=make_policy(name, ctx), t0=mat.t0,
                         horizon=horizon, faults=_fresh_faults(scf),
-                        label=f"{sc.region}/s{sc.seed}/{fault_label(fm)}/{name}"))
-                    meta.append({"region": sc.region, "seed": sc.seed,
+                        label=f"{region_label}/s{sc.seed}/{fault_label(fm)}/{name}"))
+                    meta.append({"region": region_label, "seed": sc.seed,
                                  "fault": fault_label(fm), "policy": name})
         results = simulate_many(cases)       # one batched dispatch
         rows = []
         for m, r in zip(meta, results):
             rows.append({**m, **r.to_dict()})
-        _attach_savings(rows, self.baseline)
-        return SweepResult(baseline=self.baseline, rows_=rows,
+        _attach_savings(rows, baseline)
+        return SweepResult(baseline=baseline, rows_=rows,
                            results=results)
 
 

@@ -115,7 +115,11 @@ def analyze_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
+    # jax <= 0.4.x returns a one-dict list from cost_analysis(); newer
+    # versions return the dict itself.
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     stats = analyze_module(hlo, scan_trip_hints=hints)
     coll = stats.collectives
@@ -208,8 +212,11 @@ def main() -> None:
                     with open(path, "w") as f:
                         json.dump(res, f, indent=1)
                     r = res["roofline"]
+                    peak = res["memory"]["peak_bytes"]
+                    peak_str = f"{peak / 2**30:.2f} GiB/dev" \
+                        if peak is not None else "n/a"
                     print(f"OK {tag}: compile {res['compile_s']}s "
-                          f"peak {res['memory']['peak_bytes'] and res['memory']['peak_bytes']/2**30:.2f} GiB/dev "
+                          f"peak {peak_str} "
                           f"compute {r['compute_s']*1e3:.1f}ms "
                           f"memory {r['memory_s']*1e3:.1f}ms "
                           f"coll {r['collective_s']*1e3:.1f}ms "

@@ -1,0 +1,96 @@
+"""CarbonService edge cases (ISSUE-3 satellite): forecast behaviour at and
+past the trace end, forecast-noise determinism per seed, and the
+ValueError contract listing known regions."""
+import numpy as np
+import pytest
+
+from repro.core.carbon import (REGIONS, CarbonService, synthesize_trace)
+
+
+class TestForecastEdges:
+    def test_forecast_at_trace_end_pads_with_last_value(self):
+        svc = CarbonService(trace=np.arange(1.0, 49.0))     # 48 slots
+        fc = svc.forecast(47)                               # one real value left
+        assert len(fc) == svc.horizon == 24
+        assert fc[0] == 48.0
+        np.testing.assert_array_equal(fc[1:], np.full(23, 48.0))
+
+    def test_forecast_window_straddling_end(self):
+        svc = CarbonService(trace=np.arange(1.0, 49.0))
+        fc = svc.forecast(40)
+        np.testing.assert_array_equal(fc[:8], np.arange(41.0, 49.0))
+        np.testing.assert_array_equal(fc[8:], np.full(16, 48.0))
+
+    def test_forecast_past_trace_end_is_all_zeros(self):
+        """Past the end there is no last-known value; the documented
+        behaviour is an all-zero forecast, not an IndexError."""
+        svc = CarbonService(trace=np.arange(1.0, 25.0))
+        fc = svc.forecast(24)
+        assert len(fc) == 24
+        np.testing.assert_array_equal(fc, np.zeros(24))
+
+    def test_ci_clamps_to_last_slot(self):
+        svc = CarbonService(trace=np.arange(1.0, 25.0))
+        assert svc.ci(23) == 24.0
+        assert svc.ci(1000) == 24.0
+
+    def test_forecast_extended_tiles_day_ahead(self):
+        svc = CarbonService.synthetic("ontario", 24 * 10, seed=3)
+        day = svc.forecast(0, 24)
+        ext = svc.forecast_extended(0, 60)
+        assert len(ext) == 60
+        np.testing.assert_array_equal(ext[:24], day)
+        np.testing.assert_array_equal(ext[24:48], day)
+        np.testing.assert_array_equal(ext[48:], day[:12])
+
+    def test_gradient_at_zero_and_rank_range(self):
+        svc = CarbonService.synthetic("germany", 24 * 8, seed=5)
+        assert svc.gradient(0) == 0.0
+        for t in (0, 10, 100):
+            assert 0.0 <= svc.rank(t) <= 1.0
+
+
+class TestForecastNoise:
+    def test_noisy_forecast_deterministic_per_seed(self):
+        trace = synthesize_trace("texas", 24 * 7, seed=2)
+        mk = lambda s: CarbonService(trace=trace, forecast_noise=0.2,  # noqa: E731
+                                     seed=s)
+        a, b = mk(11), mk(11)
+        np.testing.assert_array_equal(a.forecast(0, 48), b.forecast(0, 48))
+        c = mk(12)
+        assert not np.array_equal(a.forecast(0, 48), c.forecast(0, 48))
+
+    def test_noise_perturbs_forecast_not_trace(self):
+        trace = synthesize_trace("texas", 24 * 7, seed=2)
+        svc = CarbonService(trace=trace, forecast_noise=0.2, seed=7)
+        assert not np.array_equal(svc.forecast(0, 24), trace[:24])
+        np.testing.assert_array_equal(svc.trace, trace)   # truth untouched
+        assert svc.ci(5) == float(trace[5])
+        assert (svc.forecast(0, 24) >= 1.0).all()         # clip floor
+
+    def test_zero_noise_forecast_is_the_trace(self):
+        trace = synthesize_trace("texas", 24 * 3, seed=2)
+        svc = CarbonService(trace=trace)
+        np.testing.assert_array_equal(svc.forecast(0, 24), trace[:24])
+
+
+class TestRegionErrors:
+    def test_unknown_region_error_lists_known_regions(self):
+        with pytest.raises(ValueError) as ei:
+            synthesize_trace("atlantis", 24)
+        msg = str(ei.value)
+        assert "atlantis" in msg
+        for region in REGIONS:
+            assert region in msg
+
+    def test_carbon_service_synthetic_propagates_error(self):
+        with pytest.raises(ValueError, match="available regions"):
+            CarbonService.synthetic("atlantis", 24)
+
+    def test_seeded_traces_reproducible_and_distinct_by_region(self):
+        a = synthesize_trace("sweden", 24 * 7, seed=9)
+        b = synthesize_trace("sweden", 24 * 7, seed=9)
+        np.testing.assert_array_equal(a, b)
+        c = synthesize_trace("poland", 24 * 7, seed=9)
+        assert not np.array_equal(a, c)
+        assert (a >= 10.0).all()                          # clip floor

@@ -9,8 +9,11 @@ import jax.numpy as jnp
 
 from repro.configs import ARCHS, reduced
 from repro.elastic import ElasticTrainer, RescalePlan, make_compressor
+from repro.launch.mesh import make_mesh
 from repro.train import (CheckpointManager, DataConfig, OptimizerConfig,
                          SyntheticLM)
+
+pytestmark = pytest.mark.slow        # real train/rescale steps on CPU
 
 
 class TestCheckpointManager:
@@ -42,8 +45,7 @@ class TestCheckpointManager:
         cm = CheckpointManager(str(tmp_path))
         tree = {"w": jnp.arange(16.0).reshape(4, 4)}
         cm.save(1, tree, blocking=True)
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((1,), ("data",))
         sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("data"))
         out = cm.restore(jax.eval_shape(lambda: tree), shardings={"w": sh})
         np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))

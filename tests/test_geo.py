@@ -1,0 +1,299 @@
+"""Geo-distributed engine + policies: parity, semantics, API threading.
+
+The multi-region vectorised engine must reproduce the scalar geo reference
+bit-for-bit for every geo policy, with and without fault injection
+(ISSUE-3 acceptance).  On top: migration accounting invariants, placement
+behaviour of the three policies, and the Scenario/Sweep/registry
+integration."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (GeoCluster, GeoFlexPolicy, GeoGreedyPolicy,
+                        GeoStaticPolicy, MigrationModel,
+                        MultiRegionCarbonService, simulate)
+from repro.core.carbon import CarbonService
+from repro.core.simulator import FaultModel, SimCase, simulate_many
+from repro.core.types import Job
+from repro.experiment import (DEFAULT_GEO_POLICIES, Scenario, Sweep,
+                              make_policy, prepare_context, run)
+from repro.traces import TraceSpec, generate_trace
+
+WEEK = 24 * 7
+REGIONS2 = ("south-australia", "california")
+REGIONS3 = ("south-australia", "california", "ontario")
+
+_MK = {"geo-static": GeoStaticPolicy, "geo-greedy": GeoGreedyPolicy,
+       "geo-flex": GeoFlexPolicy}
+
+
+@pytest.fixture(scope="module")
+def world():
+    geo = GeoCluster.split(20, REGIONS3)
+    mci = MultiRegionCarbonService.synthetic(REGIONS3, WEEK * 2 + 24 * 30,
+                                             seed=21)
+    jobs = generate_trace(TraceSpec(family="azure", hours=WEEK, capacity=20,
+                                    seed=22), geo.queues)
+    return geo, mci, jobs
+
+
+def assert_geo_results_identical(a, b, ctx=""):
+    assert a.carbon_g == b.carbon_g, ctx
+    assert a.energy_kwh == b.energy_kwh, ctx
+    np.testing.assert_array_equal(a.completion, b.completion, err_msg=ctx)
+    np.testing.assert_array_equal(a.violations, b.violations, err_msg=ctx)
+    np.testing.assert_array_equal(a.wait_slots, b.wait_slots, err_msg=ctx)
+    np.testing.assert_array_equal(a.final_region, b.final_region, err_msg=ctx)
+    np.testing.assert_array_equal(a.region_carbon_g, b.region_carbon_g,
+                                  err_msg=ctx)
+    np.testing.assert_array_equal(a.region_energy_kwh, b.region_energy_kwh,
+                                  err_msg=ctx)
+    assert a.migrations == b.migrations, ctx
+    assert a.migration_carbon_g == b.migration_carbon_g, ctx
+    assert len(a.slots) == len(b.slots), ctx
+    for la, lb in zip(a.slots, b.slots):
+        assert la == lb, f"{ctx}: slot {la.slot}"
+
+
+# --- engine parity -----------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy_name", sorted(_MK))
+def test_geo_engines_identical_per_policy(world, policy_name):
+    geo, mci, jobs = world
+    mk = _MK[policy_name]
+    rs = simulate(jobs, mci, geo, mk(), horizon=WEEK, engine="scalar")
+    rv = simulate(jobs, mci, geo, mk(), horizon=WEEK, engine="vector")
+    assert_geo_results_identical(rs, rv, policy_name)
+    assert (rv.completion >= 0).all()
+    assert set(rv.final_region.tolist()) <= set(range(geo.n_regions))
+
+
+@pytest.mark.parametrize("policy_name", sorted(_MK))
+@pytest.mark.parametrize("fault_seed", [2, 9])
+def test_geo_engines_identical_under_faults(world, policy_name, fault_seed):
+    geo, mci, jobs = world
+    mk = _MK[policy_name]
+    mk_faults = lambda: FaultModel(straggler_rate=0.15, failure_rate=0.05,  # noqa: E731
+                                   seed=fault_seed)
+    rs = simulate(jobs, mci, geo, mk(), horizon=WEEK, engine="scalar",
+                  faults=mk_faults())
+    rv = simulate(jobs, mci, geo, mk(), horizon=WEEK, engine="vector",
+                  faults=mk_faults())
+    assert_geo_results_identical(rs, rv, f"{policy_name}+faults")
+
+
+def test_simulate_many_dispatches_geo_cases(world):
+    geo, mci, jobs = world
+    cases = [SimCase(jobs=jobs, ci=mci, cluster=geo, policy=_MK[n](),
+                     horizon=WEEK, label=n) for n in sorted(_MK)]
+    batch = simulate_many(cases)
+    for n, r in zip(sorted(_MK), batch):
+        solo = simulate(jobs, mci, geo, _MK[n](), horizon=WEEK)
+        assert_geo_results_identical(solo, r, f"simulate_many/{n}")
+
+
+# --- accounting & semantics --------------------------------------------------
+
+
+def test_region_totals_sum_to_run_totals(world):
+    geo, mci, jobs = world
+    r = simulate(jobs, mci, geo, GeoFlexPolicy(), horizon=WEEK)
+    assert r.migrations > 0                       # the scenario exercises moves
+    assert r.migration_carbon_g > 0
+    np.testing.assert_allclose(r.region_carbon_g.sum(), r.carbon_g, rtol=1e-12)
+    np.testing.assert_allclose(r.region_energy_kwh.sum(), r.energy_kwh,
+                               rtol=1e-12)
+    assert (r.region_energy_kwh >= 0).all()
+    assert r.migration_carbon_g < r.carbon_g
+
+
+def test_migration_cost_model_scales_with_job_size():
+    mm = MigrationModel(base_slots=1, slots_per_length=0.1,
+                        energy_kwh_per_gb=0.05, min_gb=2.0)
+    small = Job(job_id=0, arrival=0, length=2.0, queue=0, delay=6,
+                profile=np.ones(1))
+    big = Job(job_id=1, arrival=0, length=40.0, queue=0, delay=6,
+              profile=np.ones(1), comm_size=8.0)
+    assert mm.slots(big) > mm.slots(small) >= 1
+    assert mm.energy_kwh(small) == pytest.approx(0.05 * 2.0)   # floored
+    assert mm.energy_kwh(big) == pytest.approx(0.05 * 8.0)
+    assert mm.carbon_g(big, 100.0) == pytest.approx(0.05 * 8.0 * 100.0)
+
+
+def test_geo_static_pins_jobs_to_home_region(world):
+    geo, mci, jobs = world
+    r = simulate(jobs, mci, geo, GeoStaticPolicy(), horizon=WEEK)
+    assert r.migrations == 0
+    rows = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
+    expect = np.array([geo.home_region(i) for i in range(len(rows))])
+    np.testing.assert_array_equal(r.final_region, expect)
+
+
+def test_geo_greedy_prefers_cleaner_regions(world):
+    geo, mci, jobs = world
+    r = simulate(jobs, mci, geo, GeoGreedyPolicy(), horizon=WEEK)
+    assert r.migrations == 0
+    # mean CI per region orders ontario (clean) above south-australia;
+    # greedy placement must send more work to the cleaner regions than
+    # the static round-robin does
+    static = simulate(jobs, mci, geo, GeoStaticPolicy(), horizon=WEEK)
+    mean_ci = np.array([s.trace.mean() for s in mci.services])
+    cleanest = int(np.argmin(mean_ci))
+    assert (r.final_region == cleanest).sum() \
+        >= (static.final_region == cleanest).sum()
+    assert r.carbon_g < static.carbon_g
+
+
+def test_geo_flex_beats_static_with_migration_costs_charged(world):
+    geo, mci, jobs = world
+    static = simulate(jobs, mci, geo, GeoStaticPolicy(), horizon=WEEK)
+    flex = simulate(jobs, mci, geo, GeoFlexPolicy(), horizon=WEEK)
+    assert flex.migrations > 0 and flex.migration_carbon_g > 0
+    assert flex.carbon_g < static.carbon_g
+
+
+def test_bad_region_index_rejected(world):
+    geo, mci, jobs = world
+
+    @dataclasses.dataclass
+    class BadPolicy:
+        name: str = "bad"
+
+        def on_window_start(self, mci, t0, horizon, jobs, geo):
+            pass
+
+        def decide_geo(self, t, active, mci, geo):
+            return geo.capacity_vec(), {a.job.job_id: (99, a.job.k_min)
+                                        for a in active}
+
+        def on_completion(self, t, job, violated):
+            pass
+
+    with pytest.raises(ValueError, match="region"):
+        simulate(jobs[:5], mci, geo, BadPolicy(), horizon=24)
+
+
+def test_geo_cluster_validation_and_split():
+    geo = GeoCluster.split(7, REGIONS3)
+    assert geo.capacities == (3, 2, 2) and geo.capacity == 7
+    assert [geo.home_region(i) for i in range(5)] == [0, 1, 2, 0, 1]
+    sub = geo.region_cluster(1)
+    assert sub.capacity == 2 and sub.queues == geo.queues
+    with pytest.raises(ValueError, match="align"):
+        GeoCluster(regions=REGIONS2, capacities=(4,), queues=geo.queues)
+    with pytest.raises(ValueError, match="positive"):
+        GeoCluster(regions=REGIONS2, capacities=(4, 0), queues=geo.queues)
+
+
+def test_multi_region_service_validation():
+    mci = MultiRegionCarbonService.synthetic(REGIONS2, 48, seed=1)
+    assert mci.n_regions == 2 and len(mci) == 48
+    assert mci.index("california") == 1
+    assert mci.service("california") is mci.services[1]
+    assert mci.ci_vec(0).shape == (2,)
+    assert mci.forecast_matrix(0, 24).shape == (2, 24)
+    assert 0.0 <= mci.rank_vec(5).min() <= 1.0
+    assert mci.cleanest(3) == int(np.argmin(mci.ci_vec(3)))
+    with pytest.raises(ValueError, match="texas"):
+        mci.index("texas")
+    with pytest.raises(ValueError, match="equal length"):
+        MultiRegionCarbonService(
+            REGIONS2, (CarbonService.synthetic("ontario", 24),
+                       CarbonService.synthetic("sweden", 48)))
+    with pytest.raises(ValueError, match="duplicate"):
+        MultiRegionCarbonService.synthetic(("ontario", "ontario"), 24)
+
+
+def test_geo_cluster_requires_multi_region_service(world):
+    geo, mci, jobs = world
+    with pytest.raises(TypeError, match="MultiRegionCarbonService"):
+        simulate(jobs, CarbonService.synthetic("ontario", WEEK * 2), geo,
+                 GeoStaticPolicy(), horizon=WEEK)
+
+
+# --- experiment API threading ------------------------------------------------
+
+
+TINY_GEO = dict(regions=REGIONS2, capacity=10, learn_weeks=1, seed=3,
+                family="alibaba")
+
+
+class TestGeoScenario:
+    def test_materialize_builds_geo_world(self):
+        mat = Scenario(**TINY_GEO).materialize()
+        assert mat.is_geo
+        assert mat.geo.regions == REGIONS2
+        assert sum(mat.geo.capacities) == 10
+        assert mat.mci.n_regions == 2
+        assert mat.ci is mat.mci.service(0)     # single-region anchor
+        assert len(mat.mci) >= mat.scenario.hours
+
+    def test_single_region_scenario_unchanged(self):
+        mat = Scenario(capacity=10, learn_weeks=1, seed=3).materialize()
+        assert not mat.is_geo and mat.geo is None and mat.mci is None
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="nowhere"):
+            Scenario(regions=("california", "nowhere"))
+        with pytest.raises(ValueError, match=">= 2"):
+            Scenario(regions=("california",))
+
+    def test_round_trip_with_migration_model(self):
+        import json
+        sc = Scenario(**TINY_GEO,
+                      migration=MigrationModel(base_slots=2))
+        rt = Scenario.from_dict(json.loads(json.dumps(sc.to_dict())))
+        assert rt.regions == sc.regions
+        assert rt.migration.base_slots == 2
+        assert rt == sc
+
+
+class TestGeoRegistryAndDriver:
+    def test_geo_policies_rejected_on_single_region_scenario(self):
+        with pytest.raises(ValueError, match="regions"):
+            run(Scenario(capacity=8, learn_weeks=1), ["geo-flex"])
+
+    def test_single_region_policies_rejected_on_geo_scenario(self):
+        with pytest.raises(ValueError, match="single-region"):
+            run(Scenario(**TINY_GEO), ["carbonflex"])
+
+    def test_driver_defaults_to_geo_set_and_flex_wins(self):
+        res = run(Scenario(**TINY_GEO))
+        assert res.policies == DEFAULT_GEO_POLICIES
+        for n in DEFAULT_GEO_POLICIES:
+            assert (res.weekly[n][0].completion >= 0).all(), n
+        assert res.savings("geo-flex", "geo-static") > 0
+
+    def test_context_carries_geo_objects(self):
+        mat = Scenario(**TINY_GEO).materialize()
+        ctx = prepare_context(mat, ["geo-static"])
+        assert ctx.geo is mat.geo and ctx.mci is mat.mci
+        pol = make_policy("geo-flex", ctx)
+        assert pol.name == "geo-flex"
+
+
+class TestGeoSweep:
+    def test_geo_sweep_defaults_baseline_and_labels(self):
+        sw = Sweep(base=Scenario(**TINY_GEO), seeds=[3, 4],
+                   policies=["geo-greedy", "geo-flex"])
+        sr = sw.run()
+        assert sr.baseline == "geo-static"
+        rows = sr.rows()
+        assert {r["policy"] for r in rows} == {"geo-static", "geo-greedy",
+                                               "geo-flex"}
+        assert all(r["region"] == "south-australia+california" for r in rows)
+        assert all("migrations" in r for r in rows)
+        flex = [r for r in rows if r["policy"] == "geo-flex"]
+        assert all(r["savings_pct"] > 0 for r in flex)
+        payload = sr.to_json()
+        from repro.experiment import SweepResult
+        restored = SweepResult.from_json(payload)
+        assert restored.to_json() == payload
+
+    def test_geo_base_rejects_single_region_axis(self):
+        sw = Sweep(base=Scenario(**TINY_GEO), regions=["ontario"],
+                   policies=["geo-static"])
+        with pytest.raises(ValueError, match="seeds"):
+            sw.run()

@@ -1,0 +1,71 @@
+"""Golden regression: a tiny sweep must reproduce its checked-in JSON
+exactly (ISSUE-3 satellite).
+
+The fixture pins the full ``Sweep.to_json`` payload of a 2-region x
+2-seed x 3-policy grid — per-case carbon/energy floats included — so an
+engine refactor that silently shifts the EXPERIMENTS.md numbers fails
+here first.  Regenerate deliberately (after verifying the shift is
+intended) with:
+
+    PYTHONPATH=src python tests/test_golden_sweep.py --regen
+"""
+import json
+import os
+
+from repro.experiment import Scenario, Sweep
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data", "golden_sweep.json")
+
+
+def golden_sweep() -> Sweep:
+    """2 regions x 2 seeds x 3 policies, no-KB policies so the grid runs
+    in seconds (the engine semantics, not the learning phase, are pinned)."""
+    return Sweep(
+        base=Scenario(capacity=8, learn_weeks=1, family="alibaba", seed=101),
+        regions=["california", "ontario"],
+        seeds=[11, 12],
+        policies=["carbon-agnostic", "gaia", "wait-awhile"])
+
+
+def test_golden_sweep_reproduces_fixture_exactly():
+    with open(FIXTURE) as f:
+        want = json.load(f)
+    got = json.loads(golden_sweep().run().to_json())
+    # compare piecewise first for a readable diff on mismatch
+    assert got["baseline"] == want["baseline"]
+    assert len(got["rows"]) == len(want["rows"]) == 12
+    for g, w in zip(got["rows"], want["rows"]):
+        key = (w["region"], w["seed"], w["policy"])
+        assert g == w, f"row drifted: {key}"
+    assert got["summary"] == want["summary"]
+    assert got == want
+
+
+def test_fixture_shape_sanity():
+    with open(FIXTURE) as f:
+        want = json.load(f)
+    rows = want["rows"]
+    assert {r["policy"] for r in rows} == {"carbon-agnostic", "gaia",
+                                           "wait-awhile"}
+    assert {r["region"] for r in rows} == {"california", "ontario"}
+    assert {r["seed"] for r in rows} == {11, 12}
+    assert all(r["carbon_g"] > 0 for r in rows)
+    base = [r for r in rows if r["policy"] == "carbon-agnostic"]
+    assert all(r["savings_pct"] == 0.0 for r in base)
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--regen", action="store_true",
+                    help="rewrite the fixture from the current engine")
+    if ap.parse_args().regen:
+        os.makedirs(os.path.dirname(FIXTURE), exist_ok=True)
+        payload = golden_sweep().run().to_json()
+        with open(FIXTURE, "w") as f:
+            f.write(payload)
+            f.write("\n")
+        print(f"wrote {FIXTURE} ({len(payload)} bytes)")

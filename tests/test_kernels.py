@@ -10,6 +10,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ops, ref
 
+pytestmark = pytest.mark.pallas      # interpret mode here, compiled on TPU
+
 
 class TestKNNKernel:
     @given(n=st.integers(1, 700), d=st.integers(1, 40), seed=st.integers(0, 99))

@@ -17,7 +17,8 @@ def _mk_kb(n=80, d=13, seed=0, **kw):
 
 
 class TestQueryCache:
-    @pytest.mark.parametrize("backend", ["numpy", "jax", "pallas"])
+    @pytest.mark.parametrize("backend", [
+        "numpy", "jax", pytest.param("pallas", marks=pytest.mark.pallas)])
     def test_cached_matches_uncached(self, backend):
         kb_c, states = _mk_kb(backend=backend, cache=True)
         kb_u, _ = _mk_kb(backend=backend, cache=False)
@@ -44,7 +45,8 @@ class TestQueryCache:
 
 
 class TestQueryBatch:
-    @pytest.mark.parametrize("backend", ["numpy", "jax", "pallas"])
+    @pytest.mark.parametrize("backend", [
+        "numpy", "jax", pytest.param("pallas", marks=pytest.mark.pallas)])
     def test_batch_rows_match_single_queries(self, backend):
         kb, states = _mk_kb(backend=backend)
         rng = np.random.default_rng(1)
@@ -65,6 +67,7 @@ class TestQueryBatch:
         assert d[0, 0] < 1e-6
 
 
+@pytest.mark.pallas
 class TestBatchedKernel:
     def test_batch_distances_match_reference(self):
         rng = np.random.default_rng(3)

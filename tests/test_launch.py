@@ -10,6 +10,7 @@ import jax
 
 from repro.configs import ARCHS, LONG_CONTEXT_ARCHS
 from repro.launch.dryrun import runnable
+from repro.launch.mesh import make_abstract_mesh, make_mesh
 from repro.models import SHAPES
 
 
@@ -55,8 +56,7 @@ class TestInputSpecsSmall:
         from repro.models import LogicalRules
         from repro.train import batch_specs
 
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((1, 1), ("data", "model"))
         rules = LogicalRules(mesh)
         cfg = ARCHS["internvl2-2b"]
         specs = batch_specs(cfg, SHAPES["train_4k"], rules)
@@ -69,8 +69,7 @@ class TestInputSpecsSmall:
         from repro.models import LogicalRules
         from repro.train import abstract_state, init_state
 
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((1, 1), ("data", "model"))
         rules = LogicalRules(mesh)
         cfg = reduced(ARCHS["llama3-8b"])
         ab = abstract_state(cfg, rules)
@@ -86,9 +85,7 @@ class TestMeshRules:
         """36 heads don't divide 16 -> heads dim replicated (DESIGN.md §6)."""
         from repro.models import LogicalRules
 
-        mesh = jax.sharding.AbstractMesh(
-            (16, 16), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_abstract_mesh((16, 16), ("data", "model"))
         rules = LogicalRules(mesh)
         spec = rules.spec("fsdp", "heads", "head_dim", dims=(2304, 36, 64))
         assert len(spec) < 2 or spec[1] is None      # heads replicated
@@ -98,8 +95,7 @@ class TestMeshRules:
     def test_spec_divisibility(self):
         from repro.models import LogicalRules
 
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((1, 1), ("data", "model"))
         rules = LogicalRules(mesh)
         # divisible dims keep their mapping (trivially on a 1x1 mesh)
         s = rules.spec("batch", "seq", dims=(8, 128))

@@ -14,17 +14,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCHS, reduced
+from repro.launch.mesh import make_mesh
 from repro.models import LogicalRules, forward, init_params
 from repro.models.common import chunked_attention
 from repro.models.ssm import chunked_linear_attention, reference_scan
 from repro.serve import init_cache, make_serve_step
 from repro.train import OptimizerConfig, init_state, lr_at, make_train_step
 
+pytestmark = pytest.mark.slow        # per-arch smokes dominate suite runtime
+
 
 @pytest.fixture(scope="module")
 def rules():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     return LogicalRules(mesh)
 
 

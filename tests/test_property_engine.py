@@ -1,0 +1,216 @@
+"""Property-based engine invariants (hypothesis, see requirements-dev.txt).
+
+Three invariant families over randomized worlds:
+
+- vector-vs-scalar ``simulate()`` parity on random job sets / CI traces /
+  fault seeds (single-region AND geo engines);
+- accounting sanity: non-negative per-slot energy, run totals equal to the
+  slot-log sums, violations consistent with deadlines;
+- profile laws: ``amdahl_profile`` / ``roofline_profile`` marginals are
+  monotone non-increasing with ``p(k_min) == 1``.
+
+Each property is a plain ``_check_*`` helper driven twice: by a
+hypothesis ``@given`` sweep, and by a small fixed-seed parametrize smoke
+so the invariants are exercised even where hypothesis is absent
+(tests/conftest.py shims ``@given`` into a skip in that case)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CarbonService, ClusterConfig, GeoCluster,
+                        GeoFlexPolicy, GeoGreedyPolicy, GeoStaticPolicy,
+                        MultiRegionCarbonService, baselines, simulate)
+from repro.core.carbon import REGIONS, synthesize_trace
+from repro.core.profiles import (RooflineTerms, amdahl_profile,
+                                 roofline_profile)
+from repro.core.simulator import FaultModel
+from repro.core.types import Job
+
+POLICIES = {
+    "carbon-agnostic": baselines.CarbonAgnosticPolicy,
+    "gaia": lambda: baselines.GaiaPolicy(mean_length=3.0),
+    "wait-awhile": baselines.WaitAwhilePolicy,
+    "carbonscaler": lambda: baselines.CarbonScalerPolicy(mean_length=3.0),
+    "vcc-scaling": lambda: baselines.VCCPolicy(scaling=True),
+}
+GEO_POLICIES = {"geo-static": GeoStaticPolicy, "geo-greedy": GeoGreedyPolicy,
+                "geo-flex": GeoFlexPolicy}
+
+
+def _random_world(seed: int):
+    """A seeded random (cluster, ci, jobs) world: mixed elasticities,
+    heterogeneous power/comm, random arrivals in a 72-slot window."""
+    rng = np.random.default_rng(seed)
+    cluster = ClusterConfig.default(capacity=int(rng.integers(4, 12)))
+    ci = CarbonService(trace=rng.uniform(30.0, 700.0, 24 * 40))
+    jobs = []
+    for i in range(int(rng.integers(3, 22))):
+        k_min = int(rng.integers(1, 3))
+        k_max = k_min + int(rng.integers(0, 7))
+        prof = amdahl_profile(k_min, k_max, float(rng.uniform(0.0, 0.95)))
+        q = int(rng.integers(0, 3))
+        jobs.append(Job(
+            job_id=i, arrival=int(rng.integers(0, 72)),
+            length=float(rng.uniform(0.5, 10.0)), queue=q,
+            delay=cluster.queues[q].delay, profile=prof, k_min=k_min,
+            power=float(rng.uniform(0.5, 1.5)),
+            comm_size=float(rng.uniform(0.0, 40.0))))
+    return cluster, ci, jobs
+
+
+def _assert_identical(a, b, ctx):
+    assert a.carbon_g == b.carbon_g, ctx
+    assert a.energy_kwh == b.energy_kwh, ctx
+    np.testing.assert_array_equal(a.completion, b.completion, err_msg=ctx)
+    np.testing.assert_array_equal(a.violations, b.violations, err_msg=ctx)
+    np.testing.assert_array_equal(a.wait_slots, b.wait_slots, err_msg=ctx)
+    assert len(a.slots) == len(b.slots) \
+        and all(x == y for x, y in zip(a.slots, b.slots)), ctx
+
+
+def _check_parity(seed: int, policy_name: str, fault_seed: int | None):
+    cluster, ci, jobs = _random_world(seed)
+    mk = POLICIES[policy_name]
+    mk_faults = (lambda: None) if fault_seed is None else \
+        (lambda: FaultModel(straggler_rate=0.15, failure_rate=0.05,
+                            seed=fault_seed))
+    rs = simulate(jobs, ci, cluster, mk(), horizon=96, engine="scalar",
+                  faults=mk_faults())
+    rv = simulate(jobs, ci, cluster, mk(), horizon=96, engine="vector",
+                  faults=mk_faults())
+    _assert_identical(rs, rv, f"seed={seed} policy={policy_name}")
+
+
+def _check_geo_parity(seed: int, policy_name: str, fault_seed: int | None):
+    cluster, ci, jobs = _random_world(seed)
+    rng = np.random.default_rng(seed + 1)
+    regions = tuple(rng.choice(sorted(REGIONS), size=int(rng.integers(2, 4)),
+                               replace=False))
+    geo = GeoCluster.split(cluster.capacity + 2, regions)
+    mci = MultiRegionCarbonService(
+        regions, tuple(CarbonService(trace=synthesize_trace(r, 24 * 40,
+                                                            seed=seed))
+                       for r in regions))
+    mk = GEO_POLICIES[policy_name]
+    mk_faults = (lambda: None) if fault_seed is None else \
+        (lambda: FaultModel(straggler_rate=0.1, failure_rate=0.05,
+                            seed=fault_seed))
+    rs = simulate(jobs, mci, geo, mk(), horizon=96, engine="scalar",
+                  faults=mk_faults())
+    rv = simulate(jobs, mci, geo, mk(), horizon=96, engine="vector",
+                  faults=mk_faults())
+    _assert_identical(rs, rv, f"geo seed={seed} policy={policy_name}")
+    np.testing.assert_array_equal(rs.final_region, rv.final_region)
+    assert rs.migrations == rv.migrations
+    assert rs.migration_carbon_g == rv.migration_carbon_g
+
+
+def _check_accounting(seed: int, policy_name: str):
+    cluster, ci, jobs = _random_world(seed)
+    r = simulate(jobs, ci, cluster, POLICIES[policy_name](), horizon=96)
+    assert r.energy_kwh >= 0.0 and r.carbon_g >= 0.0
+    assert all(s.energy_kwh >= 0.0 and s.carbon_g >= 0.0 for s in r.slots)
+    # run totals are exactly the slot-log sums (same accumulation order)
+    e = c = 0.0
+    for s in r.slots:
+        e += s.energy_kwh
+        c += s.carbon_g
+    assert e == r.energy_kwh and c == r.carbon_g
+    # run-to-completion + deadline bookkeeping
+    assert (r.completion >= 0).all()
+    rows = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
+    deadlines = np.array([j.deadline for j in rows])
+    np.testing.assert_array_equal(r.violations, r.completion > deadlines)
+    assert (r.wait_slots >= 0).all()
+
+
+def _check_amdahl(k_min: int, extra: int, sigma: float):
+    prof = amdahl_profile(k_min, k_min + extra, sigma)
+    assert len(prof) == extra + 1
+    assert prof[0] == 1.0                      # p(k_min) == 1 (paper §3)
+    assert (prof >= 0.0).all()
+    assert (np.diff(prof) <= 1e-12).all()      # monotone non-increasing
+
+
+def _check_roofline(flops: float, hbm: float, grad: float, k_max: int):
+    terms = RooflineTerms(flops=flops, hbm_bytes=hbm, grad_bytes=grad)
+    prof = roofline_profile(terms, k_min=1, k_max=k_max)
+    assert prof[0] == 1.0
+    assert (prof >= 0.0).all()
+    assert (np.diff(prof) <= 1e-12).all()
+
+
+# --- hypothesis sweeps -------------------------------------------------------
+
+
+@given(seed=st.integers(0, 10**6), policy=st.sampled_from(sorted(POLICIES)),
+       faulty=st.booleans())
+@settings(max_examples=20, deadline=None)
+def test_engine_parity_random_worlds(seed, policy, faulty):
+    _check_parity(seed, policy, fault_seed=seed % 97 if faulty else None)
+
+
+@given(seed=st.integers(0, 10**6),
+       policy=st.sampled_from(sorted(GEO_POLICIES)), faulty=st.booleans())
+@settings(max_examples=15, deadline=None)
+def test_geo_engine_parity_random_worlds(seed, policy, faulty):
+    _check_geo_parity(seed, policy, fault_seed=seed % 89 if faulty else None)
+
+
+@given(seed=st.integers(0, 10**6), policy=st.sampled_from(sorted(POLICIES)))
+@settings(max_examples=15, deadline=None)
+def test_accounting_invariants_random_worlds(seed, policy):
+    _check_accounting(seed, policy)
+
+
+@given(k_min=st.integers(1, 4), extra=st.integers(0, 12),
+       sigma=st.floats(min_value=0.0, max_value=0.95))
+@settings(max_examples=50, deadline=None)
+def test_amdahl_profile_laws(k_min, extra, sigma):
+    _check_amdahl(k_min, extra, sigma)
+
+
+@given(flops=st.floats(min_value=1e10, max_value=1e16),
+       hbm=st.floats(min_value=1e8, max_value=1e14),
+       grad=st.floats(min_value=1e5, max_value=1e12),
+       k_max=st.integers(1, 16))
+@settings(max_examples=50, deadline=None)
+def test_roofline_profile_laws(flops, hbm, grad, k_max):
+    _check_roofline(flops, hbm, grad, k_max)
+
+
+# --- fixed-seed smoke twins (run even without hypothesis) --------------------
+
+
+@pytest.mark.parametrize("seed", [0, 7, 1234])
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+def test_engine_parity_smoke(seed, policy):
+    _check_parity(seed, policy, fault_seed=None)
+    _check_parity(seed + 1, policy, fault_seed=seed + 2)
+
+
+@pytest.mark.parametrize("seed", [0, 7, 1234])
+@pytest.mark.parametrize("policy", sorted(GEO_POLICIES))
+def test_geo_engine_parity_smoke(seed, policy):
+    _check_geo_parity(seed, policy, fault_seed=None)
+    _check_geo_parity(seed + 1, policy, fault_seed=seed + 2)
+
+
+@pytest.mark.parametrize("seed", [3, 99])
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+def test_accounting_invariants_smoke(seed, policy):
+    _check_accounting(seed, policy)
+
+
+@pytest.mark.parametrize("k_min,extra,sigma", [
+    (1, 0, 0.0), (1, 12, 0.5), (2, 7, 0.95), (4, 3, 0.3)])
+def test_amdahl_profile_smoke(k_min, extra, sigma):
+    _check_amdahl(k_min, extra, sigma)
+
+
+@pytest.mark.parametrize("flops,hbm,grad,k_max", [
+    (1e14, 1e11, 1e9, 16),    # compute-bound, cheap sync -> elastic
+    (1e12, 1e12, 1e11, 8),    # collective-dominated -> inelastic
+    (1e10, 1e8, 1e5, 1)])
+def test_roofline_profile_smoke(flops, hbm, grad, k_max):
+    _check_roofline(flops, hbm, grad, k_max)

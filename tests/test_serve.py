@@ -11,14 +11,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCHS, reduced
+from repro.launch.mesh import make_mesh
 from repro.models import LogicalRules, init_params
 from repro.serve import init_cache, make_prefill, make_serve_step
+
+pytestmark = pytest.mark.slow        # model-substrate end-to-end paths
 
 
 @pytest.fixture(scope="module")
 def rules():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     return LogicalRules(mesh)
 
 
