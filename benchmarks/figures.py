@@ -116,9 +116,9 @@ def tab_overheads() -> dict:
     out = {}
 
     t = time.time()
-    res = solve([dataclasses.replace(j, arrival=j.arrival % (24 * 7))
-                 for j in hist[:600]], ci.trace[:24 * 7], cluster.capacity,
-                backend="numpy")
+    solve([dataclasses.replace(j, arrival=j.arrival % (24 * 7))
+           for j in hist[:600]], ci.trace[:24 * 7], cluster.capacity,
+          backend="numpy")
     out["oracle_week_numpy_s"] = round(time.time() - t, 2)
 
     t = time.time()

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from repro.configs import ARCHS, reduced
 from repro.launch.mesh import make_mesh
 from repro.models import LogicalRules, forward, init_params
-from repro.serve import init_cache, make_prefill, make_serve_step
+from repro.serve import make_prefill, make_serve_step
 
 
 def main() -> None:

@@ -13,7 +13,6 @@ to bound wall time.  On real hardware run e.g.:
   python examples/train_carbon_aware.py --preset 100m --steps 300 --max-dp 8
 """
 import argparse
-import dataclasses
 import os
 import sys
 
@@ -26,7 +25,6 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import CarbonService
-from repro.core.profiles import RooflineTerms, roofline_profile
 from repro.elastic import ElasticTrainer, RescalePlan, make_compressor
 from repro.models.common import ModelConfig
 from repro.train import DataConfig, OptimizerConfig, SyntheticLM
@@ -49,8 +47,6 @@ def carbon_plan(ci: CarbonService, hours: int, steps_per_slot: int,
                 max_dp: int) -> list[RescalePlan]:
     """CarbonFlex-style elastic plan: allocation tracks the day-ahead CI
     rank through the job's roofline-derived scaling profile."""
-    terms = RooflineTerms(flops=2e12, hbm_bytes=2e10, grad_bytes=4e8)
-    profile = roofline_profile(terms, 1, max_dp)
     plan = []
     for t in range(hours):
         rank = ci.rank(t)

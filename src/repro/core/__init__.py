@@ -20,12 +20,19 @@ Public surface:
                                      (``geo-static``/``geo-greedy``/
                                      ``geo-flex``) over ``GeoCluster`` +
                                      ``MultiRegionCarbonService`` worlds
+- ``dag``                          — precedence-aware DAG workloads:
+                                     ``DagSpec``/``TaskNode``, criticality
+                                     analysis, and the ``dag-fcfs``/
+                                     ``dag-carbon``/``dag-cap`` policies
+                                     over dependency-gated engine runs
 
 The declarative experiment layer (policy registry, ``Scenario``, ``run``,
 ``Sweep``) lives one level up in ``repro.experiment``.
 """
-from . import baselines, carbon, emissions, geo, knowledge, oracle, policy, profiles, provisioning, scheduling, simulator, types  # noqa: F401
+from . import baselines, carbon, dag, emissions, geo, knowledge, oracle, policy, profiles, provisioning, scheduling, simulator, types  # noqa: F401
 from .carbon import CarbonService, MultiRegionCarbonService, synthesize_trace  # noqa: F401
+from .dag import (DagCapPolicy, DagCarbonPolicy, DagFcfsPolicy, DagSpec,  # noqa: F401
+                  TaskNode, criticality_from_jobs, expand_dags)
 from .geo import GeoFlexPolicy, GeoGreedyPolicy, GeoPolicy, GeoStaticPolicy  # noqa: F401
 from .knowledge import KnowledgeBase  # noqa: F401
 from .policy import (CarbonFlexPolicy, LearnOutcome, OraclePolicy, Policy,  # noqa: F401

@@ -12,7 +12,7 @@ import numpy as np
 
 from .carbon import CarbonService
 from .scheduling import ActiveJob
-from .types import ClusterConfig, Job
+from .types import ClusterConfig
 
 
 def _fcfs_base_alloc(active: list[ActiveJob], m_t: int,

@@ -15,8 +15,6 @@ the job at scale s during the slot; for ring-all-reduce DP training that is
 """
 from __future__ import annotations
 
-import numpy as np
-
 from .types import ClusterConfig, Job
 
 

@@ -112,7 +112,7 @@ def _greedy_numpy(jobs, ci, capacity, horizon, lengths, k_extra):
     j_idx, t_idx, k_val, gain, _ = _build_entries(jobs, ci, horizon)
     n = len(jobs)
     kmin = [j.k_min for j in jobs]
-    lens = [float(l) - _EPS for l in lengths]
+    lens = [float(v) - _EPS for v in lengths]
     work = [0.0] * n
     used = [0] * horizon
     alloc = [[0] * horizon for _ in range(n)]

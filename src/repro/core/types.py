@@ -16,7 +16,7 @@ server is one data-parallel slice (see DESIGN.md §2).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence
+from typing import Sequence
 
 import numpy as np
 
@@ -42,7 +42,14 @@ def default_queues(scale: float = 1.0) -> list[QueueConfig]:
 
 @dataclasses.dataclass
 class Job:
-    """An elastic batch job (Section 3)."""
+    """An elastic batch job (Section 3), optionally one task of a DAG.
+
+    ``deps`` lists the ``job_id`` s of predecessor tasks in the same
+    submitted job list: the engines gate this job until every predecessor
+    has completed (see ``core/dag.py`` for the DAG model and the
+    precedence-aware policies).  Independent jobs leave it empty.  While
+    gated the job is invisible to the policy, burns no waiting budget, and
+    its slack/deadline count from its *release* slot instead of arrival."""
 
     job_id: int
     arrival: int                   # a_j, slot index
@@ -56,6 +63,7 @@ class Job:
     power: float = 1.0
     comm_size: float = 0.0
     arch: str = "generic"          # which assigned architecture this job trains
+    deps: tuple[int, ...] = ()     # predecessor job_ids (precedence gating)
 
     @property
     def k_max(self) -> int:

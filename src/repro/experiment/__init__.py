@@ -32,8 +32,9 @@ Quickstart::
     print(sweep.run().table())
 """
 from . import registry  # noqa: F401
-from .driver import (DEFAULT_GEO_POLICIES, DEFAULT_POLICIES,  # noqa: F401
-                     ExperimentResult, prepare_context, run)
+from .driver import (DEFAULT_DAG_POLICIES, DEFAULT_GEO_POLICIES,  # noqa: F401
+                     DEFAULT_POLICIES, ExperimentResult, prepare_context,
+                     run)
 from .registry import (PolicyContext, PolicySpec, available_policies,  # noqa: F401
                        make_policy, register_policy)
 from .scenario import WEEK, MaterializedScenario, Scenario  # noqa: F401

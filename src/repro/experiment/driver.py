@@ -37,6 +37,11 @@ DEFAULT_GEO_POLICIES: tuple[str, ...] = (
     "geo-static", "geo-greedy", "geo-flex",
 )
 
+#: The precedence-aware comparison set (scenarios with a DAG workload).
+DEFAULT_DAG_POLICIES: tuple[str, ...] = (
+    "dag-fcfs", "dag-carbon", "dag-cap",
+)
+
 
 def prepare_context(
     mat: MaterializedScenario,
@@ -119,7 +124,7 @@ class ExperimentResult:
                     f"baseline {baseline!r} was not part of this run; "
                     f"policies: {', '.join(self.weekly)}")
             return baseline
-        for cand in ("carbon-agnostic", "geo-static"):
+        for cand in ("carbon-agnostic", "geo-static", "dag-fcfs"):
             if cand in self.weekly:
                 return cand
         return None
@@ -179,9 +184,11 @@ def run(
     for the aging window, feature weights for tuning studies).
     """
     if policies is None:
-        policies = DEFAULT_GEO_POLICIES if scenario.is_geo else DEFAULT_POLICIES
+        policies = (DEFAULT_GEO_POLICIES if scenario.is_geo
+                    else DEFAULT_DAG_POLICIES if scenario.is_dag
+                    else DEFAULT_POLICIES)
     names = tuple(policies)
-    check_scenario_policies(names, scenario.is_geo)
+    check_scenario_policies(names, scenario.is_geo, scenario.is_dag)
     t_start = time.perf_counter()
     mat = scenario.materialize()
     ctx = prepare_context(mat, names, kb_kwargs=kb_kwargs, backend=backend)

@@ -21,6 +21,7 @@ from typing import Callable
 
 from repro.core import baselines
 from repro.core.carbon import CarbonService, MultiRegionCarbonService
+from repro.core.dag import DagCapPolicy, DagCarbonPolicy, DagFcfsPolicy
 from repro.core.geo import GeoFlexPolicy, GeoGreedyPolicy, GeoStaticPolicy
 from repro.core.knowledge import KnowledgeBase
 from repro.core.policy import (CarbonFlexMPCPolicy, CarbonFlexPolicy,
@@ -60,6 +61,7 @@ class PolicySpec:
     needs_kb: bool = False
     needs_history: bool = False
     geo: bool = False                # runs on GeoCluster scenarios only
+    dag: bool = False                # runs on Scenario(dag=...) only
     description: str = ""
 
 
@@ -68,12 +70,14 @@ REGISTRY: dict[str, PolicySpec] = {}
 
 def register_policy(name: str, *, needs_kb: bool = False,
                     needs_history: bool = False, geo: bool = False,
-                    description: str = ""):
+                    dag: bool = False, description: str = ""):
     """Decorator registering a ``PolicyContext -> Policy`` builder.
 
     ``geo=True`` marks a policy implementing the ``GeoPolicy`` protocol:
-    it runs only on scenarios with a ``regions`` axis (the driver/sweep
-    reject mixing geo and single-region policies in one scenario)."""
+    it runs only on scenarios with a ``regions`` axis.  ``dag=True`` marks
+    a precedence-aware policy: it runs only on ``Scenario(dag=...)``
+    workloads.  The driver/sweep reject mixing scenario kinds and policy
+    families (:func:`check_scenario_policies`)."""
 
     def deco(builder: Callable[[PolicyContext], Policy]):
         if name in REGISTRY:
@@ -81,7 +85,7 @@ def register_policy(name: str, *, needs_kb: bool = False,
         REGISTRY[name] = PolicySpec(name=name, builder=builder,
                                     needs_kb=needs_kb,
                                     needs_history=needs_history,
-                                    geo=geo,
+                                    geo=geo, dag=dag,
                                     description=description)
         return builder
 
@@ -110,8 +114,9 @@ def needs_kb(names) -> bool:
     return any(get_spec(n).needs_kb for n in names)
 
 
-def check_scenario_policies(names, is_geo: bool) -> None:
-    """Reject geo policies on single-region scenarios and vice versa."""
+def check_scenario_policies(names, is_geo: bool, is_dag: bool = False) -> None:
+    """Reject policies whose family does not match the scenario kind
+    (single-region / geo / DAG are mutually exclusive workload axes)."""
     for n in names:
         spec = get_spec(n)
         if spec.geo and not is_geo:
@@ -123,6 +128,15 @@ def check_scenario_policies(names, is_geo: bool) -> None:
                 f"policy {n!r} is single-region; a geo scenario runs geo "
                 f"policies (e.g. geo-static/geo-greedy/geo-flex) — drop "
                 f"Scenario.regions for single-region studies")
+        if spec.dag and not is_dag:
+            raise ValueError(
+                f"policy {n!r} is precedence-aware; give the Scenario a "
+                f"DAG workload (e.g. dag=DagConfig())")
+        if not spec.dag and is_dag:
+            raise ValueError(
+                f"policy {n!r} assumes independent jobs; a DAG scenario "
+                f"runs the dag policy family (dag-fcfs/dag-carbon/dag-cap) "
+                f"— drop Scenario.dag for independent-job studies")
 
 
 # --- the nine §6 policies ---------------------------------------------------
@@ -207,3 +221,29 @@ def _geo_greedy(ctx: PolicyContext) -> Policy:
                              "beats the migration carbon cost")
 def _geo_flex(ctx: PolicyContext) -> Policy:
     return GeoFlexPolicy()
+
+
+# --- precedence-aware DAG policies -------------------------------------------
+
+
+@register_policy("dag-fcfs", dag=True,
+                 description="precedence-only baseline: FCFS over ready "
+                             "tasks, no carbon awareness")
+def _dag_fcfs(ctx: PolicyContext) -> Policy:
+    return DagFcfsPolicy()
+
+
+@register_policy("dag-carbon", dag=True,
+                 description="CarbonFlex-style CI-rank suspend/resume "
+                             "applied per ready task (the per-job carbon "
+                             "scheduler on DAG structure)")
+def _dag_carbon(ctx: PolicyContext) -> Policy:
+    return DagCarbonPolicy()
+
+
+@register_policy("dag-cap", dag=True,
+                 description="PCAPS-style criticality: critical-path tasks "
+                             "exempt from suspension, slack tasks deferred "
+                             "into clean windows")
+def _dag_cap(ctx: PolicyContext) -> Policy:
+    return DagCapPolicy()

@@ -19,7 +19,8 @@ from repro.core.carbon import (REGIONS, CarbonService,
 from repro.core.simulator import FaultModel
 from repro.core.types import (ClusterConfig, GeoCluster, Job, MigrationModel,
                               QueueConfig, default_queues)
-from repro.traces import TraceSpec, generate_trace, mean_length
+from repro.traces import (DagConfig, TraceSpec, dag_mean_task_length,
+                          generate_dag_trace, generate_trace, mean_length)
 
 WEEK = 24 * 7
 # CI margin past the nominal trace so run-to-completion overruns stay
@@ -78,11 +79,20 @@ class Scenario:
     ``MultiRegionCarbonService`` pair the geo policies run on (``region``
     is then ignored).  ``migration`` overrides the default
     :class:`MigrationModel` cost knobs.
+
+    A non-``None`` ``dag`` (:class:`repro.traces.DagConfig`) makes the
+    workload precedence-aware: the trace generator emits whole DAG jobs
+    (chains / map-reduce stages / random layered DAGs) expanded to tasks
+    with ``Job.deps`` edges, the engines gate each task until its
+    predecessors complete, and the ``dag-*`` policy family applies.
+    ``DagConfig(independent=True)`` generates the same tasks with the
+    edges stripped — the independent-task upper-bound twin.
     """
 
     region: str = "south-australia"
     regions: tuple[str, ...] = ()
     migration: MigrationModel | None = None
+    dag: DagConfig | None = None        # DAG workload (precedence gating)
     family: str = "azure"
     capacity: int = 60
     utilization: float = 0.5
@@ -110,12 +120,20 @@ class Scenario:
         if self.regions and len(self.regions) < 2:
             raise ValueError("a geo scenario needs >= 2 regions; use "
                              "`region=` for single-region studies")
+        if self.dag is not None and self.regions:
+            raise ValueError("DAG scenarios are single-region (the geo "
+                             "engines do not gate precedence yet); drop "
+                             "either `dag` or `regions`")
         if self.learn_weeks < 1 or self.eval_weeks < 1:
             raise ValueError("learn_weeks and eval_weeks must be >= 1")
 
     @property
     def is_geo(self) -> bool:
         return bool(self.regions)
+
+    @property
+    def is_dag(self) -> bool:
+        return self.dag is not None
 
     # --- derived geometry ---------------------------------------------------
 
@@ -171,12 +189,19 @@ class Scenario:
                                          self.hours + CI_MARGIN_HOURS,
                                          seed=self.seed)
         spec = self.trace_spec()
-        jobs = generate_trace(spec, cluster.queues)
+
+        def _gen(s: TraceSpec) -> list[Job]:
+            if self.dag is not None:
+                return generate_dag_trace(s, self.dag, cluster.queues)
+            return generate_trace(s, cluster.queues)
+
+        jobs = _gen(spec)
         t0 = self.t0
+        # Arrival-based splits keep DAGs whole: every task of a DAG
+        # arrives at the DAG's slot (gating releases it later).
         hist = [j for j in jobs if j.arrival < t0]
         if self.eval_shift:
-            shifted = generate_trace(self.trace_spec(shifted=True),
-                                     cluster.queues)
+            shifted = _gen(self.trace_spec(shifted=True))
             eval_jobs = [j for j in shifted if t0 <= j.arrival < self.hours]
             jobs = hist + eval_jobs
         else:
@@ -184,7 +209,9 @@ class Scenario:
         mat = MaterializedScenario(
             scenario=self, cluster=cluster, ci=ci, spec=spec, jobs=jobs,
             hist=hist, eval_jobs=eval_jobs, t0=t0,
-            mean_length=mean_length(spec), mci=mci, geo=geo)
+            mean_length=(dag_mean_task_length(self.dag, self.length_scale)
+                         if self.dag is not None else mean_length(spec)),
+            mci=mci, geo=geo)
         object.__setattr__(self, "_materialized", mat)
         return mat
 
@@ -199,6 +226,9 @@ class Scenario:
                             "failure_rate", "seed")}
         if self.migration is not None:
             d["migration"] = dataclasses.asdict(self.migration)
+        if self.dag is not None:
+            d["dag"] = {**dataclasses.asdict(self.dag),
+                        "shapes": list(self.dag.shapes)}
         return d
 
     @classmethod
@@ -209,4 +239,6 @@ class Scenario:
             d["faults"] = FaultModel(**d["faults"])
         if d.get("migration"):
             d["migration"] = MigrationModel(**d["migration"])
+        if d.get("dag"):
+            d["dag"] = DagConfig(**d["dag"])
         return cls(**d)

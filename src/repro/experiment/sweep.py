@@ -74,9 +74,12 @@ class Sweep:
         return tuple(self.faults)
 
     def effective_baseline(self) -> str:
-        """``geo-static`` replaces the single-region default on geo grids."""
+        """The status-quo policy of the grid's kind replaces the
+        single-region default on geo / DAG grids."""
         if self.base.is_geo and self.baseline == "carbon-agnostic":
             return "geo-static"
+        if self.base.is_dag and self.baseline == "carbon-agnostic":
+            return "dag-fcfs"
         return self.baseline
 
     def scenarios(self) -> list[Scenario]:
@@ -97,7 +100,7 @@ class Sweep:
         baseline = self.effective_baseline()
         if baseline not in names:
             names = (baseline,) + names
-        check_scenario_policies(names, self.base.is_geo)
+        check_scenario_policies(names, self.base.is_geo, self.base.is_dag)
         return names
 
     def run(self, progress: Callable[[str], None] | None = None) -> "SweepResult":

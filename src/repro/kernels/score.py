@@ -20,7 +20,7 @@ BLOCK_T = 128
 
 
 def _score_kernel(marg_ref, ts_ref, te_ref, ci_ref, out_ref, *, block_t):
-    j_blk = pl.program_id(1) * 0  # grid order: (t, j); silence unused warn
+    _ = pl.program_id(1)          # grid order: (t, j)
     t0 = pl.program_id(0) * block_t
     marg = marg_ref[...].astype(jnp.float32)          # (BJ, 1)
     ts = ts_ref[...].astype(jnp.int32)                # (BJ, 1)

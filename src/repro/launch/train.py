@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import argparse
 import os
-import sys
 import time
 
 
@@ -34,8 +33,6 @@ def main() -> None:
     if args.host_devices:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.host_devices}")
-
-    import jax
 
     from repro.configs import ARCHS, reduced
     from repro.elastic import ElasticTrainer, RescalePlan, make_compressor

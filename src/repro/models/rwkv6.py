@@ -8,14 +8,12 @@ prefill and 500k decode are O(chunk)/O(1) in memory.
 """
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
-from .common import LogicalRules, ModelConfig, constrain, dense_init, rms_norm
-from .ssm import chunked_linear_attention, recurrence_step
+from .common import LogicalRules, ModelConfig, constrain, rms_norm
+from .ssm import chunked_linear_attention
 
 LORA_RANK = 64
 HEAD_DIM = 64

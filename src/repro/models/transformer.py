@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
 from .common import (LogicalRules, ModelConfig, attention, constrain,
-                     dense_init, rms_norm, rope, swiglu)
+                     rms_norm, rope, swiglu)
 
 PyTree = Any
 

@@ -11,8 +11,6 @@ one-layer-sized.
 """
 from __future__ import annotations
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name

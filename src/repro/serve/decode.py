@@ -55,9 +55,11 @@ def _decode_attn_local(q, kc, vc, kn, vn, length, *, axis):
     pos = length - off
     in_range = (pos >= 0) & (pos < s_loc)
     posc = jnp.clip(pos, 0, s_loc - 1)
-    upd = lambda c, n: jax.lax.dynamic_update_slice_in_dim(
-        c, jnp.where(in_range, n, jax.lax.dynamic_slice_in_dim(c, posc, 1, 1)),
-        posc, axis=1)
+    def upd(c, n):
+        return jax.lax.dynamic_update_slice_in_dim(
+            c, jnp.where(in_range, n,
+                         jax.lax.dynamic_slice_in_dim(c, posc, 1, 1)),
+            posc, axis=1)
     kc = upd(kc, kn)
     vc = upd(vc, vn)
 
@@ -69,11 +71,11 @@ def _decode_attn_local(q, kc, vc, kn, vn, length, *, axis):
     s = jnp.where(mask, s, -1e30)
     m = s.max(axis=-1)
     p = jnp.exp(s - m[..., None])
-    l = p.sum(axis=-1)
+    denom = p.sum(axis=-1)
     o = jnp.einsum("bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
     m_glob = jax.lax.pmax(m, axis)
     corr = jnp.exp(m - m_glob)
-    l_glob = jax.lax.psum(l * corr, axis)
+    l_glob = jax.lax.psum(denom * corr, axis)
     o_glob = jax.lax.psum(o * corr[..., None], axis)
     out = o_glob / jnp.maximum(l_glob, 1e-30)[..., None]
     out = out.transpose(0, 3, 1, 2, 4).reshape(b, 1, hq, dh)
@@ -130,7 +132,6 @@ def _tf_cache_specs(cfg: ModelConfig) -> dict:
 def _tf_decode_step(params, token, cache, cfg: ModelConfig, rules: LogicalRules):
     x = params["embed"].astype(cfg.compute_dtype)[token][:, None]   # (B,1,d)
     length = cache["length"]
-    max_seq = cache["k"].shape[2]
     # Pin the STACKED cache sharding: without this, SPMD propagation shards
     # the layer dim over `model` for the scan and then all-gathers the full
     # (B, S, KV, hd) slice every layer (measured 68 GB/step on llama3
@@ -284,7 +285,7 @@ def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int,
 def cache_shardings(cfg: ModelConfig, rules: LogicalRules, batch: int,
                     max_seq: int) -> Any:
     ab = abstract_cache(cfg, batch, max_seq, rules)
-    return jax.tree.map(lambda l: l.sharding, ab)
+    return jax.tree.map(lambda leaf: leaf.sharding, ab)
 
 
 def serve_input_specs(cfg: ModelConfig, batch: int, rules: LogicalRules):

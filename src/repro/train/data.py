@@ -21,7 +21,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import LogicalRules, ModelConfig
+from repro.models.common import ModelConfig
 
 
 @dataclasses.dataclass

@@ -49,7 +49,8 @@ def lr_at(step: jnp.ndarray, cfg: OptimizerConfig) -> jnp.ndarray:
 
 def global_norm(tree: Any) -> jnp.ndarray:
     leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
 
 
 def clip_by_global_norm(tree: Any, max_norm: float):
@@ -59,7 +60,9 @@ def clip_by_global_norm(tree: Any, max_norm: float):
 
 
 def init_moments(params: Any, moment_dtype) -> tuple[Any, Any]:
-    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    def zeros(p):
+        return jnp.zeros(p.shape, moment_dtype)
+
     return jax.tree.map(zeros, params), jax.tree.map(zeros, params)
 
 

@@ -10,7 +10,6 @@ fp32 logits+softmax footprint into chunk-sized slices.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Optional
 
 import numpy as np

@@ -1,10 +1,19 @@
 """CarbonService edge cases (ISSUE-3 satellite): forecast behaviour at and
 past the trace end, forecast-noise determinism per seed, and the
-ValueError contract listing known regions."""
+ValueError contract listing known regions.
+
+Plus the ISSUE-4 property suite: for ANY slot ``t`` (including far past
+the trace end) and ANY horizon, ``forecast`` / ``forecast_extended`` /
+``forecast_matrix`` return finite values of the requested length,
+deterministically per seed — driven by a hypothesis sweep and a
+fixed-seed parametrize twin (tests/conftest.py shims hypothesis into
+skips when absent)."""
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 
-from repro.core.carbon import (REGIONS, CarbonService, synthesize_trace)
+from repro.core.carbon import (REGIONS, CarbonService,
+                               MultiRegionCarbonService, synthesize_trace)
 
 
 class TestForecastEdges:
@@ -72,6 +81,59 @@ class TestForecastNoise:
         trace = synthesize_trace("texas", 24 * 3, seed=2)
         svc = CarbonService(trace=trace)
         np.testing.assert_array_equal(svc.forecast(0, 24), trace[:24])
+
+
+def _check_forecast_properties(t: int, horizon: int, noise: float,
+                               seed: int) -> None:
+    """Any t, any horizon >= 1: finite values, exact length, deterministic
+    per seed (including at/past the trace end and with forecast noise)."""
+    hours = 24 * 4
+    mk = lambda: CarbonService(  # noqa: E731
+        trace=synthesize_trace("germany", hours, seed=seed),
+        forecast_noise=noise, seed=seed)
+    a, b = mk(), mk()
+    for svc in (a, b):
+        fc = svc.forecast(t, horizon)
+        assert len(fc) == horizon
+        assert np.isfinite(fc).all()
+        assert (fc >= 0.0).all()
+        ext = svc.forecast_extended(t, horizon)
+        assert len(ext) == horizon
+        assert np.isfinite(ext).all()
+    np.testing.assert_array_equal(a.forecast(t, horizon),
+                                  b.forecast(t, horizon))
+    np.testing.assert_array_equal(a.forecast_extended(t, horizon),
+                                  b.forecast_extended(t, horizon))
+    # extension tiles the day-ahead block it starts from
+    day = a.forecast(t, a.horizon)
+    ext = a.forecast_extended(t, horizon)
+    np.testing.assert_array_equal(ext, np.tile(day, int(np.ceil(
+        horizon / len(day))))[:horizon])
+    # the multi-region matrix inherits the same contract, row per region
+    mci = MultiRegionCarbonService(
+        ("germany", "ontario"),
+        (a, CarbonService(trace=synthesize_trace("ontario", hours,
+                                                 seed=seed))))
+    m = mci.forecast_matrix(t, horizon)
+    assert m.shape == (2, horizon)
+    assert np.isfinite(m).all()
+    np.testing.assert_array_equal(m[0], a.forecast(t, horizon))
+    np.testing.assert_array_equal(m[1], mci.services[1].forecast(t, horizon))
+
+
+class TestForecastProperties:
+    @pytest.mark.parametrize("t", [0, 50, 95, 96, 500])
+    @pytest.mark.parametrize("horizon", [1, 24, 100])
+    @pytest.mark.parametrize("noise", [0.0, 0.2])
+    def test_fixed(self, t, horizon, noise):
+        _check_forecast_properties(t, horizon, noise, seed=13)
+
+    @settings(max_examples=40, deadline=None)
+    @given(t=st.integers(0, 24 * 8), horizon=st.integers(1, 24 * 6),
+           noise=st.sampled_from([0.0, 0.1, 0.5]),
+           seed=st.integers(0, 1000))
+    def test_property(self, t, horizon, noise, seed):
+        _check_forecast_properties(t, horizon, noise, seed)
 
 
 class TestRegionErrors:

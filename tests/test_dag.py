@@ -1,0 +1,450 @@
+"""Precedence-aware DAG subsystem (ISSUE-4): model, gating, parity, API.
+
+Five families:
+
+- the ``DagSpec``/``TaskNode`` model and shape builders (topological
+  authoring, cycles unrepresentable, published pipeline shapes);
+- expansion to engine jobs + the PCAPS criticality analysis;
+- engine gating semantics: a task never starts before its predecessors
+  complete (the engine invariant), gated tasks burn no waiting budget,
+  slack/deadline count from release;
+- vector-vs-scalar bit parity for all three DAG policies, with and
+  without fault injection, on randomized DAG worlds (fixed-seed smokes +
+  hypothesis sweeps, per tests/conftest.py);
+- Scenario/Sweep/registry threading (dag axis, default baseline,
+  round-trip, policy-family rejection both ways).
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CarbonService, ClusterConfig, DagCapPolicy,
+                        DagCarbonPolicy, DagFcfsPolicy, DagSpec, GeoCluster,
+                        MultiRegionCarbonService, TaskNode,
+                        criticality_from_jobs, expand_dags, simulate)
+from repro.core.dag import chain_tasks, layered_tasks, map_reduce_tasks
+from repro.core.simulator import FaultModel, SimCase, simulate_many
+from repro.core.types import Job
+from repro.experiment import (DEFAULT_DAG_POLICIES, Scenario, Sweep,
+                              make_policy, prepare_context, run)
+from repro.traces import (DagConfig, TraceSpec, dag_mean_task_length,
+                          generate_dag_specs, generate_dag_trace)
+
+WEEK = 24 * 7
+
+_MK = {"dag-fcfs": DagFcfsPolicy, "dag-carbon": DagCarbonPolicy,
+       "dag-cap": DagCapPolicy}
+
+
+def _queues():
+    return ClusterConfig.default(8).queues
+
+
+# --- model and builders ------------------------------------------------------
+
+
+class TestDagModel:
+    def test_chain_shape(self):
+        tasks = chain_tasks([2.0, 3.0, 1.0])
+        spec = DagSpec(dag_id=0, arrival=5, tasks=tasks)
+        assert spec.edges() == [(0, 1), (1, 2)]
+        assert spec.depth() == 3
+        assert spec.total_work() == 6.0
+        assert spec.critical_path_length() == 6.0
+
+    def test_map_reduce_shape(self):
+        tasks = map_reduce_tasks(1.0, [2.0, 4.0, 3.0], 1.5)
+        spec = DagSpec(dag_id=0, arrival=0, tasks=tasks)
+        assert spec.n_tasks == 5
+        assert set(spec.edges()) == {(0, 1), (0, 2), (0, 3),
+                                     (1, 4), (2, 4), (3, 4)}
+        assert spec.depth() == 3
+        # critical path goes through the slowest mapper
+        assert spec.critical_path_length() == 1.0 + 4.0 + 1.5
+
+    def test_layered_parents_come_from_previous_layer(self):
+        rng = np.random.default_rng(3)
+        tasks = layered_tasks([3, 4, 2], [1.0] * 9, rng)
+        spec = DagSpec(dag_id=0, arrival=0, tasks=tasks)
+        assert spec.depth() == 3
+        layers = [list(range(0, 3)), list(range(3, 7)), list(range(7, 9))]
+        for li, layer in enumerate(layers):
+            for i in layer:
+                deps = tasks[i].deps
+                if li == 0:
+                    assert deps == ()
+                else:
+                    assert deps and all(d in layers[li - 1] for d in deps)
+
+    def test_forward_deps_rejected(self):
+        with pytest.raises(ValueError, match="topological"):
+            DagSpec(dag_id=0, arrival=0,
+                    tasks=(TaskNode(1.0, deps=(1,)), TaskNode(1.0)))
+        with pytest.raises(ValueError, match="topological"):
+            DagSpec(dag_id=0, arrival=0, tasks=(TaskNode(1.0, deps=(0,)),))
+        with pytest.raises(ValueError, match=">= 1 task"):
+            DagSpec(dag_id=0, arrival=0, tasks=())
+
+    def test_builder_validation(self):
+        with pytest.raises(ValueError, match="mapper"):
+            map_reduce_tasks(1.0, [], 1.0)
+        with pytest.raises(ValueError, match="lengths"):
+            layered_tasks([2, 2], [1.0] * 3, np.random.default_rng(0))
+        with pytest.raises(ValueError, match=">= 1"):
+            layered_tasks([2, 0], [1.0] * 2, np.random.default_rng(0))
+
+
+class TestExpandAndCriticality:
+    def test_expand_maps_deps_to_job_ids(self):
+        specs = [DagSpec(dag_id=0, arrival=2, tasks=chain_tasks([2.0, 8.0])),
+                 DagSpec(dag_id=1, arrival=4,
+                         tasks=map_reduce_tasks(1.0, [2.0, 2.0], 1.0))]
+        jobs = expand_dags(specs, _queues(), id_base=10)
+        assert [j.job_id for j in jobs] == list(range(10, 16))
+        assert jobs[1].deps == (10,)
+        assert jobs[5].deps == (13, 14)           # reduce waits on both maps
+        assert all(j.arrival == 2 for j in jobs[:2])
+        assert all(j.arrival == 4 for j in jobs[2:])
+        # queue assignment follows the existing per-length rule
+        assert jobs[0].queue == 0 and jobs[1].queue == 1
+
+    def test_expand_independent_strips_edges(self):
+        specs = [DagSpec(dag_id=0, arrival=0, tasks=chain_tasks([1.0, 1.0]))]
+        jobs = expand_dags(specs, _queues(), independent=True)
+        assert all(j.deps == () for j in jobs)
+
+    def test_chain_is_all_critical(self):
+        jobs = expand_dags(
+            [DagSpec(dag_id=0, arrival=0, tasks=chain_tasks([1.0, 2.0]))],
+            _queues())
+        assert all(criticality_from_jobs(jobs).values())
+
+    def test_diamond_slack_branch_not_critical(self):
+        tasks = map_reduce_tasks(1.0, [5.0, 1.0], 1.0)
+        jobs = expand_dags([DagSpec(dag_id=0, arrival=0, tasks=tasks)],
+                           _queues())
+        crit = criticality_from_jobs(jobs)
+        assert crit[jobs[0].job_id] and crit[jobs[1].job_id]   # source, slow map
+        assert not crit[jobs[2].job_id]                        # fast map: slack
+        assert crit[jobs[3].job_id]                            # reduce
+
+    def test_isolated_tasks_are_critical(self):
+        jobs = [Job(job_id=i, arrival=0, length=2.0, queue=0, delay=6,
+                    profile=np.ones(1)) for i in range(3)]
+        assert all(criticality_from_jobs(jobs).values())
+
+    def test_cycle_detected(self):
+        jobs = [Job(job_id=0, arrival=0, length=1.0, queue=0, delay=6,
+                    profile=np.ones(1), deps=(1,)),
+                Job(job_id=1, arrival=0, length=1.0, queue=0, delay=6,
+                    profile=np.ones(1), deps=(0,))]
+        with pytest.raises(ValueError, match="cycle"):
+            criticality_from_jobs(jobs)
+
+
+# --- engine gating semantics -------------------------------------------------
+
+
+def _mk_job(jid, length, deps=(), arrival=0, delay=6):
+    return Job(job_id=jid, arrival=arrival, length=length, queue=0,
+               delay=delay, profile=np.ones(1), deps=deps)
+
+
+@pytest.mark.parametrize("engine", ["scalar", "vector"])
+class TestGatingSemantics:
+    def test_chain_serialises(self, engine):
+        cluster = ClusterConfig.default(8)
+        ci = CarbonService(trace=np.full(24 * 10, 100.0))
+        jobs = [_mk_job(0, 3.0), _mk_job(1, 2.0, deps=(0,)),
+                _mk_job(2, 1.0, deps=(1,))]
+        r = simulate(jobs, ci, cluster, DagFcfsPolicy(), horizon=48,
+                     engine=engine)
+        # parent completes at t=2; child released t=3, completes t=4; ...
+        np.testing.assert_array_equal(r.completion, [2, 4, 5])
+        np.testing.assert_array_equal(r.wait_slots, [0.0, 0.0, 0.0])
+        assert not r.violations.any()
+
+    def test_gated_tasks_burn_no_slack_and_deadline_counts_from_release(
+            self, engine):
+        cluster = ClusterConfig.default(8)
+        ci = CarbonService(trace=np.full(24 * 10, 100.0))
+        # parent runs 10 slots; child's static deadline (arrival 0 + 1 + 6)
+        # would long be blown, but release-based accounting clears it
+        jobs = [_mk_job(0, 10.0), _mk_job(1, 1.0, deps=(0,))]
+        r = simulate(jobs, ci, cluster, DagFcfsPolicy(), horizon=48,
+                     engine=engine)
+        np.testing.assert_array_equal(r.completion, [9, 10])
+        assert r.wait_slots[1] == 0.0            # never burned slack gated
+        assert not r.violations[1]               # deadline from release slot
+        assert r.completion[1] > jobs[1].deadline   # static one WAS blown
+
+    def test_fan_in_waits_for_all_parents(self, engine):
+        cluster = ClusterConfig.default(8)
+        ci = CarbonService(trace=np.full(24 * 10, 100.0))
+        jobs = [_mk_job(0, 2.0), _mk_job(1, 6.0),
+                _mk_job(2, 1.0, deps=(0, 1))]
+        r = simulate(jobs, ci, cluster, DagFcfsPolicy(), horizon=48,
+                     engine=engine)
+        assert r.completion[2] > r.completion[1] > r.completion[0]
+
+    def test_missing_dep_rejected(self, engine):
+        cluster = ClusterConfig.default(8)
+        ci = CarbonService(trace=np.full(48, 100.0))
+        jobs = [_mk_job(0, 1.0, deps=(99,))]
+        with pytest.raises(ValueError, match="submitted"):
+            simulate(jobs, ci, cluster, DagFcfsPolicy(), horizon=24,
+                     engine=engine)
+
+    def test_cycle_rejected(self, engine):
+        cluster = ClusterConfig.default(8)
+        ci = CarbonService(trace=np.full(48, 100.0))
+        jobs = [_mk_job(0, 1.0, deps=(1,)), _mk_job(1, 1.0, deps=(0,))]
+        with pytest.raises(ValueError, match="cycle"):
+            simulate(jobs, ci, cluster, DagFcfsPolicy(), horizon=24,
+                     engine=engine)
+
+    def test_self_dep_rejected(self, engine):
+        cluster = ClusterConfig.default(8)
+        ci = CarbonService(trace=np.full(48, 100.0))
+        with pytest.raises(ValueError, match="itself"):
+            simulate([_mk_job(0, 1.0, deps=(0,))], ci, cluster,
+                     DagFcfsPolicy(), horizon=24, engine=engine)
+
+
+@dataclasses.dataclass
+class _EvilPackedPolicy:
+    """Allocates k_min to EVERY row — including gated ones — through both
+    protocols; the engines must trim gated rows identically."""
+
+    name: str = "evil"
+
+    def on_window_start(self, ci, t0, horizon, jobs, cluster) -> None:
+        self._jobs = jobs
+
+    def decide(self, t, active, ci, cluster):
+        return cluster.capacity, {j.job_id: j.k_min for j in self._jobs}
+
+    def decide_packed(self, t, eng, ci, cluster):
+        return cluster.capacity, eng.packed.k_min.copy()
+
+    def on_completion(self, t, job, violated) -> None:
+        pass
+
+
+def test_gated_rows_never_run_even_if_policy_allocates_them():
+    cluster = ClusterConfig.default(8)
+    ci = CarbonService(trace=np.full(24 * 10, 100.0))
+    jobs = [_mk_job(0, 3.0), _mk_job(1, 2.0, deps=(0,)),
+            _mk_job(2, 1.0, deps=(1,))]
+    rs = simulate(jobs, ci, cluster, _EvilPackedPolicy(), horizon=48,
+                  engine="scalar")
+    rv = simulate(jobs, ci, cluster, _EvilPackedPolicy(), horizon=48,
+                  engine="vector")
+    np.testing.assert_array_equal(rs.completion, [2, 4, 5])
+    np.testing.assert_array_equal(rv.completion, [2, 4, 5])
+    assert rs.carbon_g == rv.carbon_g
+
+
+def test_geo_engines_reject_dag_jobs():
+    geo = GeoCluster.split(8, ("south-australia", "california"))
+    mci = MultiRegionCarbonService.synthetic(
+        ("south-australia", "california"), 24 * 10, seed=1)
+    from repro.core import GeoStaticPolicy
+    jobs = [_mk_job(0, 1.0), _mk_job(1, 1.0, deps=(0,))]
+    for engine in ("scalar", "vector"):
+        with pytest.raises(ValueError, match="geo"):
+            simulate(jobs, mci, geo, GeoStaticPolicy(), horizon=24,
+                     engine=engine)
+
+
+# --- randomized parity + precedence invariant --------------------------------
+
+
+def _random_dag_world(seed: int):
+    rng = np.random.default_rng(seed)
+    cluster = ClusterConfig.default(capacity=int(rng.integers(4, 12)))
+    ci = CarbonService(trace=rng.uniform(30.0, 700.0, 24 * 60))
+    dag = DagConfig(width=int(rng.integers(2, 5)),
+                    depth=int(rng.integers(2, 5)))
+    spec = TraceSpec(family="azure", hours=72, capacity=cluster.capacity,
+                     utilization=0.4, seed=seed)
+    jobs = generate_dag_trace(spec, dag, cluster.queues)
+    return cluster, ci, jobs
+
+
+def _assert_identical(a, b, ctx):
+    assert a.carbon_g == b.carbon_g, ctx
+    assert a.energy_kwh == b.energy_kwh, ctx
+    np.testing.assert_array_equal(a.completion, b.completion, err_msg=ctx)
+    np.testing.assert_array_equal(a.violations, b.violations, err_msg=ctx)
+    np.testing.assert_array_equal(a.wait_slots, b.wait_slots, err_msg=ctx)
+    assert len(a.slots) == len(b.slots) \
+        and all(x == y for x, y in zip(a.slots, b.slots)), ctx
+
+
+def _assert_precedence_invariant(result, jobs, ctx):
+    """No task starts (hence completes) before all predecessors complete."""
+    rows = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
+    comp = {j.job_id: int(result.completion[i]) for i, j in enumerate(rows)}
+    for j in rows:
+        if comp[j.job_id] < 0:
+            continue
+        for d in j.deps:
+            assert 0 <= comp[d] < comp[j.job_id], \
+                f"{ctx}: task {j.job_id} finished at {comp[j.job_id]} " \
+                f"but predecessor {d} at {comp[d]}"
+
+
+def _check_dag_parity(seed: int, policy_name: str, fault_seed: int | None):
+    cluster, ci, jobs = _random_dag_world(seed)
+    mk = _MK[policy_name]
+    mk_faults = (lambda: None) if fault_seed is None else \
+        (lambda: FaultModel(straggler_rate=0.15, failure_rate=0.05,
+                            seed=fault_seed))
+    rs = simulate(jobs, ci, cluster, mk(), horizon=96, engine="scalar",
+                  faults=mk_faults())
+    rv = simulate(jobs, ci, cluster, mk(), horizon=96, engine="vector",
+                  faults=mk_faults())
+    ctx = f"seed={seed} policy={policy_name} faults={fault_seed}"
+    _assert_identical(rs, rv, ctx)
+    _assert_precedence_invariant(rv, jobs, ctx)
+
+
+@pytest.mark.parametrize("policy_name", sorted(_MK))
+@pytest.mark.parametrize("seed", [0, 3, 11])
+def test_dag_engines_identical_fixed(policy_name, seed):
+    _check_dag_parity(seed, policy_name, None)
+
+
+@pytest.mark.parametrize("policy_name", sorted(_MK))
+@pytest.mark.parametrize("seed,fault_seed", [(1, 2), (7, 9)])
+def test_dag_engines_identical_under_faults_fixed(policy_name, seed,
+                                                  fault_seed):
+    _check_dag_parity(seed, policy_name, fault_seed)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       policy_name=st.sampled_from(sorted(_MK)),
+       fault_seed=st.one_of(st.none(), st.integers(0, 100)))
+def test_dag_engines_identical_property(seed, policy_name, fault_seed):
+    _check_dag_parity(seed, policy_name, fault_seed)
+
+
+def test_simulate_many_dispatches_dag_cases():
+    cluster, ci, jobs = _random_dag_world(5)
+    cases = [SimCase(jobs=jobs, ci=ci, cluster=cluster, policy=_MK[n](),
+                     horizon=96, label=n) for n in sorted(_MK)]
+    for n, r in zip(sorted(_MK), simulate_many(cases)):
+        solo = simulate(jobs, ci, cluster, _MK[n](), horizon=96)
+        _assert_identical(solo, r, f"simulate_many/{n}")
+
+
+# --- trace generator ---------------------------------------------------------
+
+
+class TestDagTraceGenerator:
+    def test_deterministic_per_seed(self):
+        spec = TraceSpec(hours=48, capacity=10, seed=9)
+        a = generate_dag_trace(spec, DagConfig(), _queues())
+        b = generate_dag_trace(spec, DagConfig(), _queues())
+        assert len(a) == len(b) > 0
+        for x, y in zip(a, b):
+            assert (x.job_id, x.arrival, x.length, x.deps) \
+                == (y.job_id, y.arrival, y.length, y.deps)
+
+    def test_shapes_and_whole_dag_arrivals(self):
+        spec = TraceSpec(hours=24 * 5, capacity=20, seed=2)
+        specs = generate_dag_specs(spec, DagConfig())
+        shapes = {s.name.rstrip("0123456789") for s in specs}
+        assert shapes == {"chain", "mapreduce", "layered"}
+        assert all(2 <= s.depth() for s in specs if "chain" in s.name)
+        jobs = expand_dags(specs, _queues())
+        arr = {}
+        for j in jobs:
+            arr.setdefault(j.arch.split("/")[0], set()).add(j.arrival)
+        assert all(len(v) == 1 for v in arr.values())   # DAGs arrive whole
+        assert all(1.0 <= j.length <= 48.0 for j in jobs)
+
+    def test_independent_twin_same_tasks_no_edges(self):
+        spec = TraceSpec(hours=48, capacity=10, seed=4)
+        gated = generate_dag_trace(spec, DagConfig(), _queues())
+        indep = generate_dag_trace(spec, DagConfig(independent=True),
+                                   _queues())
+        assert len(gated) == len(indep)
+        assert any(j.deps for j in gated)
+        assert all(j.deps == () for j in indep)
+        for g, i in zip(gated, indep):
+            assert (g.length, g.arrival, g.k_min) \
+                == (i.length, i.arrival, i.k_min)
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError, match="shapes"):
+            DagConfig(shapes=("chain", "ring"))
+        with pytest.raises(ValueError, match="width"):
+            DagConfig(width=1)
+        assert dag_mean_task_length(DagConfig()) >= 1.0
+
+
+# --- experiment API threading ------------------------------------------------
+
+
+TINY_DAG = dict(dag=DagConfig(width=3, depth=3), capacity=10, learn_weeks=1,
+                seed=3, family="alibaba")
+
+
+class TestDagScenario:
+    def test_materialize_builds_dag_world(self):
+        mat = Scenario(**TINY_DAG).materialize()
+        assert mat.scenario.is_dag
+        assert any(j.deps for j in mat.eval_jobs)
+        assert mat.mean_length == dag_mean_task_length(TINY_DAG["dag"])
+
+    def test_dag_plus_regions_rejected(self):
+        with pytest.raises(ValueError, match="single-region"):
+            Scenario(dag=DagConfig(),
+                     regions=("california", "ontario"))
+
+    def test_round_trip(self):
+        sc = Scenario(**TINY_DAG)
+        rt = Scenario.from_dict(json.loads(json.dumps(sc.to_dict())))
+        assert rt == sc
+        assert rt.dag.width == 3 and rt.dag.shapes == sc.dag.shapes
+
+    def test_policy_family_rejection_both_ways(self):
+        with pytest.raises(ValueError, match="precedence-aware"):
+            run(Scenario(capacity=8, learn_weeks=1), ["dag-cap"])
+        with pytest.raises(ValueError, match="independent"):
+            run(Scenario(**TINY_DAG), ["carbon-agnostic"])
+
+    def test_driver_defaults_to_dag_set(self):
+        res = run(Scenario(**TINY_DAG))
+        assert res.policies == DEFAULT_DAG_POLICIES
+        for n in DEFAULT_DAG_POLICIES:
+            assert (res.weekly[n][0].completion >= 0).all(), n
+        assert res.savings("dag-carbon") > 0          # defaults to dag-fcfs
+        assert res.savings("dag-cap") > 0
+
+    def test_context_builds_dag_policies(self):
+        mat = Scenario(**TINY_DAG).materialize()
+        ctx = prepare_context(mat, DEFAULT_DAG_POLICIES)
+        assert make_policy("dag-cap", ctx).name == "dag-cap"
+
+
+class TestDagSweep:
+    def test_dag_sweep_defaults_baseline(self):
+        sw = Sweep(base=Scenario(**TINY_DAG), seeds=[3, 4],
+                   policies=["dag-carbon", "dag-cap"])
+        sr = sw.run()
+        assert sr.baseline == "dag-fcfs"
+        rows = sr.rows()
+        assert {r["policy"] for r in rows} == {"dag-fcfs", "dag-carbon",
+                                               "dag-cap"}
+        carbon = [r for r in rows if r["policy"] == "dag-carbon"]
+        assert all(r["savings_pct"] > 0 for r in carbon)
+        payload = sr.to_json()
+        from repro.experiment import SweepResult
+        assert SweepResult.from_json(payload).to_json() == payload

@@ -7,7 +7,6 @@ scenario's jobs exactly once and its JSON round-trips; ``learn_window``
 takes a ``ClusterConfig`` (loose form deprecated) and reports which replay
 offsets contributed."""
 import json
-import warnings
 
 import numpy as np
 import pytest
@@ -72,15 +71,18 @@ class TestRegistry:
     def test_all_policies_complete_tiny_scenario(self, tiny):
         """Round-trip: every registered single-region policy constructs via
         make_policy and completes the tiny scenario without error (geo
-        policies run on geo scenarios — tests/test_geo.py)."""
+        policies run on geo scenarios — tests/test_geo.py — and dag
+        policies on DAG scenarios — tests/test_dag.py)."""
         from repro.experiment.registry import get_spec
 
         names = available_policies()
         assert set(names) >= {"carbon-agnostic", "gaia", "wait-awhile",
                               "carbonscaler", "vcc", "vcc-scaling",
                               "carbonflex", "carbonflex-mpc", "oracle",
-                              "geo-static", "geo-greedy", "geo-flex"}
-        names = tuple(n for n in names if not get_spec(n).geo)
+                              "geo-static", "geo-greedy", "geo-flex",
+                              "dag-fcfs", "dag-carbon", "dag-cap"}
+        names = tuple(n for n in names
+                      if not get_spec(n).geo and not get_spec(n).dag)
         res = run(tiny, names)
         for name in names:
             assert len(res.weekly[name]) == 1, name

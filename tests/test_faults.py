@@ -1,5 +1,4 @@
 """Simulator-level fault/straggler injection + policy compensation."""
-import numpy as np
 
 from repro.core import CarbonService, ClusterConfig, baselines, simulate
 from repro.core.policy import CarbonFlexMPCPolicy

@@ -10,8 +10,8 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.core import (GeoCluster, GeoFlexPolicy, GeoGreedyPolicy,
-                        GeoStaticPolicy, MigrationModel,
+from repro.core import (ClusterConfig, GeoCluster, GeoFlexPolicy,
+                        GeoGreedyPolicy, GeoStaticPolicy, MigrationModel,
                         MultiRegionCarbonService, simulate)
 from repro.core.carbon import CarbonService
 from repro.core.simulator import FaultModel, SimCase, simulate_many
@@ -211,6 +211,120 @@ def test_geo_cluster_requires_multi_region_service(world):
     with pytest.raises(TypeError, match="MultiRegionCarbonService"):
         simulate(jobs, CarbonService.synthetic("ontario", WEEK * 2), geo,
                  GeoStaticPolicy(), horizon=WEEK)
+
+
+# --- MigrationModel edge cases (ISSUE-4 satellite) ---------------------------
+
+
+@dataclasses.dataclass
+class _EchoRegionPolicy:
+    """Explicitly re-asserts every job's *current* region each slot — a
+    same-region 'migration' request, which must be a no-op."""
+
+    name: str = "echo-region"
+
+    def on_window_start(self, mci, t0, horizon, jobs, geo):
+        pass
+
+    def decide_geo(self, t, active, mci, geo):
+        m_vec = geo.capacity_vec()
+        used = np.zeros(geo.n_regions, dtype=np.int64)
+        alloc = {}
+        for a in active:
+            if a.done or a.migrating:
+                continue
+            r, k = a.region, a.job.k_min
+            if used[r] + k <= m_vec[r]:
+                alloc[a.job.job_id] = (r, k)
+                used[r] += k
+        return m_vec, alloc
+
+    def on_completion(self, t, job, violated):
+        pass
+
+
+@dataclasses.dataclass
+class _OneMovePolicy:
+    """Runs every job in its current region, except one forced move of
+    region 0 -> 1 at slot ``move_at`` (checkpoint accounting probe)."""
+
+    move_at: int = 3
+    name: str = "one-move"
+
+    def on_window_start(self, mci, t0, horizon, jobs, geo):
+        pass
+
+    def decide_geo(self, t, active, mci, geo):
+        alloc = {}
+        for a in active:
+            if a.done or a.migrating:
+                continue
+            if t == self.move_at and a.region == 0 and a.started:
+                alloc[a.job.job_id] = (1, a.job.k_min)
+            else:
+                alloc[a.job.job_id] = (a.region, a.job.k_min)
+        return geo.capacity_vec(), alloc
+
+    def on_completion(self, t, job, violated):
+        pass
+
+
+class TestMigrationEdgeCases:
+    def test_zero_size_job_floors_at_min_gb_and_base_slots(self):
+        mm = MigrationModel(base_slots=2, slots_per_length=0.05,
+                            energy_kwh_per_gb=0.1, min_gb=1.5)
+        zero = Job(job_id=0, arrival=0, length=0.0, queue=0, delay=6,
+                   profile=np.ones(1), comm_size=0.0)
+        assert mm.slots(zero) == 2                      # no length term
+        assert mm.data_gb(zero) == 1.5                  # payload floored
+        assert mm.energy_kwh(zero) == pytest.approx(0.15)
+        assert mm.carbon_g(zero, 0.0) == 0.0            # free at zero CI
+
+    def test_same_region_request_is_a_noop(self, world):
+        geo, mci, jobs = world
+        echo = simulate(jobs, mci, geo, _EchoRegionPolicy(), horizon=WEEK)
+        static = simulate(jobs, mci, geo, GeoStaticPolicy(), horizon=WEEK)
+        assert echo.migrations == 0
+        assert echo.migration_carbon_g == 0.0
+        assert_geo_results_identical(echo, static, "echo-vs-static")
+
+    def test_checkpoint_restore_charged_at_destination_ci(self):
+        ci_a, ci_b = 100.0, 400.0
+        mci = MultiRegionCarbonService(
+            ("cheap", "dirty"),
+            (CarbonService(trace=np.full(24 * 10, ci_a)),
+             CarbonService(trace=np.full(24 * 10, ci_b))))
+        mm = MigrationModel(base_slots=1, slots_per_length=0.02,
+                            energy_kwh_per_gb=0.05, min_gb=1.0)
+        geo = GeoCluster(regions=("cheap", "dirty"), capacities=(2, 2),
+                         queues=ClusterConfig.default(4).queues,
+                         migration=mm)
+        job = Job(job_id=0, arrival=0, length=10.0, queue=2, delay=48,
+                  profile=np.ones(1), comm_size=4.0)
+        mig_slots = mm.slots(job)               # 1 + ceil(0.2) = 2
+        assert mig_slots == 2
+        for engine in ("scalar", "vector"):
+            r = simulate([job], mci, geo, _OneMovePolicy(move_at=3),
+                         horizon=WEEK, engine=engine)
+            assert r.migrations == 1
+            # transfer energy billed once, at the DESTINATION's CI on the
+            # initiation slot
+            assert r.migration_carbon_g \
+                == pytest.approx(mm.energy_kwh(job) * ci_b)
+            # the checkpoint/restore window suspends the job (waiting
+            # budget burned, no progress, no energy in either region)
+            assert r.wait_slots[0] == mig_slots
+            # 3 run slots, 2 suspended, then 7 slots of remaining work
+            assert r.completion[0] == 3 + mig_slots + 7 - 1
+            # 3 pre-move slots at the source CI; the rest (7 slots of
+            # remaining work + transfer) billed in the destination
+            assert r.region_energy_kwh[0] == pytest.approx(3.0)
+            assert r.region_carbon_g[0] == pytest.approx(3.0 * ci_a)
+            assert r.region_energy_kwh[1] \
+                == pytest.approx(7.0 + mm.energy_kwh(job))
+            assert r.region_carbon_g[1] \
+                == pytest.approx((7.0 + mm.energy_kwh(job)) * ci_b)
+            assert r.final_region[0] == 1
 
 
 # --- experiment API threading ------------------------------------------------

@@ -13,8 +13,11 @@ import json
 import os
 
 from repro.experiment import Scenario, Sweep
+from repro.traces import DagConfig
 
 FIXTURE = os.path.join(os.path.dirname(__file__), "data", "golden_sweep.json")
+FIXTURE_DAG = os.path.join(os.path.dirname(__file__), "data",
+                           "golden_sweep_dag.json")
 
 
 def golden_sweep() -> Sweep:
@@ -25,6 +28,17 @@ def golden_sweep() -> Sweep:
         regions=["california", "ontario"],
         seeds=[11, 12],
         policies=["carbon-agnostic", "gaia", "wait-awhile"])
+
+
+def golden_dag_sweep() -> Sweep:
+    """A small precedence-gated grid (ISSUE-4 satellite): 2 seeds x 3 DAG
+    policies over a chain/mapreduce/layered workload — pins the
+    dependency-gated engine paths and the criticality analysis."""
+    return Sweep(
+        base=Scenario(dag=DagConfig(width=3, depth=3), capacity=8,
+                      learn_weeks=1, family="alibaba", seed=101),
+        seeds=[11, 12],
+        policies=["dag-fcfs", "dag-carbon", "dag-cap"])
 
 
 def test_golden_sweep_reproduces_fixture_exactly():
@@ -39,6 +53,30 @@ def test_golden_sweep_reproduces_fixture_exactly():
         assert g == w, f"row drifted: {key}"
     assert got["summary"] == want["summary"]
     assert got == want
+
+
+def test_golden_dag_sweep_reproduces_fixture_exactly():
+    with open(FIXTURE_DAG) as f:
+        want = json.load(f)
+    got = json.loads(golden_dag_sweep().run().to_json())
+    assert got["baseline"] == want["baseline"] == "dag-fcfs"
+    assert len(got["rows"]) == len(want["rows"]) == 6
+    for g, w in zip(got["rows"], want["rows"]):
+        assert g == w, f"row drifted: {(w['seed'], w['policy'])}"
+    assert got["summary"] == want["summary"]
+    assert got == want
+
+
+def test_dag_fixture_shape_sanity():
+    with open(FIXTURE_DAG) as f:
+        want = json.load(f)
+    rows = want["rows"]
+    assert {r["policy"] for r in rows} == {"dag-fcfs", "dag-carbon",
+                                           "dag-cap"}
+    assert {r["seed"] for r in rows} == {11, 12}
+    assert all(r["carbon_g"] > 0 for r in rows)
+    carbon = [r for r in rows if r["policy"] == "dag-carbon"]
+    assert all(r["savings_pct"] > 0 for r in carbon)
 
 
 def test_fixture_shape_sanity():
@@ -64,8 +102,10 @@ if __name__ == "__main__":
                     help="rewrite the fixture from the current engine")
     if ap.parse_args().regen:
         os.makedirs(os.path.dirname(FIXTURE), exist_ok=True)
-        payload = golden_sweep().run().to_json()
-        with open(FIXTURE, "w") as f:
-            f.write(payload)
-            f.write("\n")
-        print(f"wrote {FIXTURE} ({len(payload)} bytes)")
+        for path, sweep in ((FIXTURE, golden_sweep()),
+                            (FIXTURE_DAG, golden_dag_sweep())):
+            payload = sweep.run().to_json()
+            with open(path, "w") as f:
+                f.write(payload)
+                f.write("\n")
+            print(f"wrote {path} ({len(payload)} bytes)")

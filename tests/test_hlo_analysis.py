@@ -1,5 +1,4 @@
 """HLO static-analysis tests: trip-count weighting, collectives, flops."""
-import numpy as np
 
 import jax
 import jax.numpy as jnp

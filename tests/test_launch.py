@@ -3,8 +3,6 @@
 NOTE: these tests run on the default 1-device CPU backend; the 512-device
 meshes are exercised only by the dry-run script (which sets XLA_FLAGS
 before any jax import — never set globally here)."""
-import numpy as np
-import pytest
 
 import jax
 
@@ -74,8 +72,8 @@ class TestInputSpecsSmall:
         cfg = reduced(ARCHS["llama3-8b"])
         ab = abstract_state(cfg, rules)
         real = init_state(cfg, jax.random.key(0))
-        ab_shapes = jax.tree.map(lambda l: (l.shape, str(l.dtype)), ab)
-        real_shapes = jax.tree.map(lambda l: (l.shape, str(l.dtype)), real)
+        ab_shapes = jax.tree.map(lambda v: (v.shape, str(v.dtype)), ab)
+        real_shapes = jax.tree.map(lambda v: (v.shape, str(v.dtype)), real)
         assert jax.tree.all(jax.tree.map(lambda a, b: a == b,
                                          ab_shapes, real_shapes))
 

@@ -1,5 +1,4 @@
 """End-to-end policy tests: learning + execution phases (small scale)."""
-import numpy as np
 import pytest
 
 from repro.core import (CarbonFlexPolicy, CarbonService, ClusterConfig,

@@ -3,7 +3,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.knowledge import KnowledgeBase, build_state, relative_backlog
+from repro.core.knowledge import KnowledgeBase, relative_backlog
 from repro.core.profiles import amdahl_profile
 from repro.core.provisioning import ProvisioningConfig, provision
 from repro.core.scheduling import ActiveJob, apply_slot, schedule

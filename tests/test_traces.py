@@ -3,7 +3,7 @@ import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.core.types import ClusterConfig
-from repro.traces import TraceSpec, generate_trace, mean_length
+from repro.traces import TraceSpec, generate_trace
 
 
 class TestTraces:
