@@ -168,6 +168,22 @@ def tpu_cluster() -> dict:
                              "carbonflex", "carbonflex-mpc", "oracle"])
 
 
+def forecast_gap() -> dict:
+    """§Forecast (ISSUE 5): savings-gap-to-oracle under a forecast-error
+    ladder (perfect, then AR(1) noise of growing sigma) — the degradation
+    curve of carbonflex / wait-awhile and their quantile-robust variants.
+    The oracle reads the true trace, so its column is the forecast-free
+    upper bound every gap is measured against."""
+    from repro.experiment import OracleGap, sigma_ladder
+
+    res = OracleGap(base=Scenario(capacity=40, learn_weeks=2, seed=7),
+                    seeds=(1, 2, 3),
+                    forecasts=sigma_ladder((0.0, 0.1, 0.2, 0.4))).run()
+    return {"baseline": res.baseline,
+            "summary": res.summary(),
+            "curves": {p: res.degradation_curve(p) for p in res.policies()}}
+
+
 def fault_sensitivity() -> dict:
     """Beyond-paper: carbon savings under injected stragglers/failures —
     the Algorithm-2 violation-feedback loop absorbing degraded slots."""
@@ -196,4 +212,5 @@ ALL = {
     "tab_overheads": tab_overheads,
     "tpu_cluster": tpu_cluster,
     "fault_sensitivity": fault_sensitivity,
+    "forecast_gap": forecast_gap,
 }

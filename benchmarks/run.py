@@ -44,6 +44,13 @@ def main() -> None:
                 if not k.startswith("_"):
                     print(f"{name}/{k},{float(v) * 1e6:.0f},seconds={v}")
             continue
+        if name == "forecast_gap":
+            for fc, pols in res["summary"].items():
+                for pol, s in pols.items():
+                    print(f"{name}/{fc}/{pol},0,"
+                          f"savings={s['savings_mean_pct']}%"
+                          f";gap={s['gap_mean_pp']}pp")
+            continue
         for row in csv_rows(name, res):
             print(row)
     if not args.skip_roofline and not args.only:

@@ -25,14 +25,23 @@ Public surface:
                                      analysis, and the ``dag-fcfs``/
                                      ``dag-carbon``/``dag-cap`` policies
                                      over dependency-gated engine runs
+- ``forecast``                     — pluggable carbon-forecast models
+                                     (perfect / persistence / noisy AR(1)
+                                     / quantile ensemble) behind
+                                     ``CarbonService.forecast``, plus the
+                                     quantile view robust policies use
 
 The declarative experiment layer (policy registry, ``Scenario``, ``run``,
 ``Sweep``) lives one level up in ``repro.experiment``.
 """
-from . import baselines, carbon, dag, emissions, geo, knowledge, oracle, policy, profiles, provisioning, scheduling, simulator, types  # noqa: F401
+from . import baselines, carbon, dag, emissions, forecast, geo, knowledge, oracle, policy, profiles, provisioning, scheduling, simulator, types  # noqa: F401
 from .carbon import CarbonService, MultiRegionCarbonService, synthesize_trace  # noqa: F401
 from .dag import (DagCapPolicy, DagCarbonPolicy, DagFcfsPolicy, DagSpec,  # noqa: F401
                   TaskNode, criticality_from_jobs, expand_dags)
+from .forecast import (ForecastModel, NoisyForecast, PerfectForecast,  # noqa: F401
+                       PersistenceForecast, QuantileForecast,
+                       StaticNoiseForecast, forecast_from_dict,
+                       forecast_label, forecast_to_dict)
 from .geo import GeoFlexPolicy, GeoGreedyPolicy, GeoPolicy, GeoStaticPolicy  # noqa: F401
 from .knowledge import KnowledgeBase  # noqa: F401
 from .policy import (CarbonFlexPolicy, LearnOutcome, OraclePolicy, Policy,  # noqa: F401

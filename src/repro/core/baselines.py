@@ -11,6 +11,7 @@ import dataclasses
 import numpy as np
 
 from .carbon import CarbonService
+from .forecast import QuantileCIView
 from .scheduling import ActiveJob
 from .types import ClusterConfig
 
@@ -151,6 +152,32 @@ class WaitAwhilePolicy:
 
     def on_completion(self, t, job, violated) -> None:
         pass
+
+
+@dataclasses.dataclass
+class RobustWaitAwhilePolicy(WaitAwhilePolicy):
+    """Wait-Awhile thresholding on a configurable forecast *quantile*
+    instead of the point forecast (ISSUE-5 robust variant).
+
+    Under noisy forecasts the plain policy chases phantom dips: spurious
+    low-CI slots in a single noisy path drag the 30th-percentile threshold
+    down, the job waits for clean slots that never materialize, and runs
+    forced at whatever CI the deadline lands on.  Computing the threshold
+    from the ``quantile`` band of the forecast distribution (the ensemble
+    quantile for :class:`~repro.core.forecast.QuantileForecast`, the
+    analytic band for :class:`~repro.core.forecast.NoisyForecast`) filters
+    that single-path noise; under a perfect forecast every band collapses
+    onto the truth and the policy is bit-identical to ``wait-awhile``."""
+
+    quantile: float = 0.7
+    name: str = "wait-awhile-robust"
+
+    def decide(self, t, active, ci, cluster):
+        # the plain rule, with every forecast read routed through the
+        # quantile band (ci()/gradient() still read the truth) — one
+        # shared threshold implementation, one quantile knob
+        return super().decide(t, active, QuantileCIView(ci, self.quantile),
+                              cluster)
 
 
 @dataclasses.dataclass

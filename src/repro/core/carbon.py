@@ -8,14 +8,21 @@ Offline substitution (DESIGN.md §5): ElectricityMaps traces are not bundled,
 so ``synthesize_trace`` generates seeded synthetic traces calibrated to the
 published per-region (mean, CoV) of Fig. 5 — daily + half-daily harmonics,
 a weekly component, and AR(1) noise.  The paper assumes accurate day-ahead
-forecasts (citing CarbonCast); we therefore expose the true trace as the
-forecast, with an optional noise knob for sensitivity studies.
+forecasts (citing CarbonCast); the *forecast model* is pluggable
+(``core/forecast.py``): the default :class:`~repro.core.forecast.
+PerfectForecast` exposes the true trace, while persistence / noisy /
+quantile-ensemble models stress policies with realistic forecast error.
+The old static ``forecast_noise`` knob survives as a deprecated shim.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
+
+from .forecast import (ForecastFeatureMixin, ForecastModel,  # noqa: F401
+                       PerfectForecast, StaticNoiseForecast)
 
 # (mean g CO2/kWh, daily CoV) per region, calibrated to Fig. 5's spread:
 # high-CoV renewable-heavy grids (South Australia) down to flat
@@ -74,21 +81,43 @@ def synthesize_trace(
 
 
 @dataclasses.dataclass
-class CarbonService:
-    """Day-ahead-capable CI service over a fixed hourly trace."""
+class CarbonService(ForecastFeatureMixin):
+    """Day-ahead-capable CI service over a fixed hourly trace.
+
+    ``model`` is the pluggable forecast model (``core/forecast.py``);
+    ``None`` resolves to :class:`PerfectForecast` — the historical
+    behaviour, bit-identical.  ``forecast_noise`` is the deprecated static
+    noise knob: it still works (as a :class:`StaticNoiseForecast` shim,
+    matching the old outputs bit-for-bit) but warns; pass
+    ``model=NoisyForecast(...)`` for lead-time-aware error instead."""
 
     trace: np.ndarray
     forecast_noise: float = 0.0
     horizon: int = 24
     seed: int = 0
+    model: ForecastModel | None = None
 
     def __post_init__(self) -> None:
-        self._rng = np.random.default_rng(self.seed)
         if self.forecast_noise > 0:
-            noise = self._rng.normal(1.0, self.forecast_noise, len(self.trace))
-            self._forecast = np.clip(self.trace * noise, 1.0, None)
-        else:
-            self._forecast = self.trace
+            if self.model is not None:
+                raise ValueError("pass either model= or the deprecated "
+                                 "forecast_noise=, not both")
+            warnings.warn(
+                "CarbonService(forecast_noise=...) is deprecated: it draws "
+                "one static noise realization over the whole trace, so the "
+                "realized error of a future slot never shrinks as it "
+                "approaches; pass model=NoisyForecast(sigma=...) for "
+                "lead-time-aware error (or model=StaticNoiseForecast(...) "
+                "to keep the old semantics explicitly)",
+                DeprecationWarning, stacklevel=2)
+            self.model = StaticNoiseForecast(sigma=self.forecast_noise,
+                                             seed=self.seed)
+            # the knob is consumed into the model; zero it so
+            # dataclasses.replace(svc, ...) on a shim-built service does
+            # not re-trip the model-xor-knob validation above
+            self.forecast_noise = 0.0
+        elif self.model is None:
+            self.model = PerfectForecast()
 
     @classmethod
     def synthetic(cls, region: str, hours: int, seed: int = 0, **kw) -> "CarbonService":
@@ -101,24 +130,23 @@ class CarbonService:
         return float(self.trace[min(t, len(self.trace) - 1)])
 
     def forecast(self, t: int, horizon: int | None = None) -> np.ndarray:
-        """Day-ahead forecast starting at slot t (paper footnote 3)."""
-        h = horizon or self.horizon
-        end = min(t + h, len(self._forecast))
-        out = self._forecast[t:end]
-        if len(out) < h:  # pad by repeating the last known value
-            out = np.concatenate([out, np.full(h - len(out), out[-1] if len(out) else 0.0)])
-        return out
+        """Day-ahead forecast starting at slot t (paper footnote 3),
+        delegated to the configured forecast model."""
+        return self.model.predict(self.trace, t, horizon or self.horizon)
 
-    def forecast_extended(self, t: int, horizon: int) -> np.ndarray:
-        """Forecast beyond the day-ahead horizon by tiling the day-ahead
-        diurnal pattern (the standard persistence assumption)."""
-        day = self.forecast(t, self.horizon)
-        if horizon <= len(day):
-            return day[:horizon]
-        reps = int(np.ceil(horizon / len(day)))
-        return np.tile(day, reps)[:horizon]
+    def forecast_quantile(self, t: int, horizon: int | None = None,
+                          q: float = 0.5) -> np.ndarray:
+        """Per-horizon ``q``-quantile band of the forecast; models without
+        uncertainty bands fall back to their point forecast."""
+        h = horizon or self.horizon
+        quantile = getattr(self.model, "quantile", None)
+        if quantile is None:
+            return self.model.predict(self.trace, t, h)
+        return quantile(self.trace, t, h, q)
 
     # --- Table-2 features --------------------------------------------------
+    # (forecast_extended / rank / percentile_threshold come from
+    # ForecastFeatureMixin, shared with the robust policies' QuantileCIView)
 
     def gradient(self, t: int) -> float:
         """CI gradient: normalised slope at slot t."""
@@ -126,16 +154,6 @@ class CarbonService:
             return 0.0
         prev, cur = self.trace[t - 1], self.trace[t]
         return float((cur - prev) / max(prev, 1e-9))
-
-    def rank(self, t: int) -> float:
-        """Day-ahead rank of slot t: fraction of the next-24h forecast that
-        is *more* carbon-intense than now (1.0 = best slot of the day)."""
-        fc = self.forecast(t)
-        return float(np.mean(fc > self.trace[t]))
-
-    def percentile_threshold(self, t: int, pct: float) -> float:
-        """The pct-th percentile of the next-24h forecast (Wait-Awhile)."""
-        return float(np.percentile(self.forecast(t), pct))
 
 
 @dataclasses.dataclass

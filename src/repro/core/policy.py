@@ -25,6 +25,7 @@ import numpy as np
 
 from . import oracle
 from .carbon import CarbonService
+from .forecast import QuantileCIView
 from .knowledge import KnowledgeBase, build_state, states_from_schedule
 from .provisioning import ProvisioningConfig, provision
 from .scheduling import ActiveJob, schedule, schedule_packed
@@ -143,16 +144,30 @@ def learn_window(
 
 @dataclasses.dataclass
 class CarbonFlexPolicy:
-    """Execution-phase policy (Algorithms 2 + 3 over the knowledge base)."""
+    """Execution-phase policy (Algorithms 2 + 3 over the knowledge base).
+
+    ``forecast_quantile`` (ISSUE-5 robust variant, registered as
+    ``carbonflex-robust``): when set, every forecast-derived Table-2
+    feature (day-ahead rank, min/mean CI ratios) is computed through a
+    :class:`~repro.core.forecast.QuantileCIView` at that quantile instead
+    of the point forecast, so single-path forecast noise cannot whipsaw
+    the KNN state.  Under a perfect forecast the band collapses onto the
+    truth and the robust variant is bit-identical to plain carbonflex."""
 
     kb: KnowledgeBase
     cfg: ProvisioningConfig = dataclasses.field(default_factory=ProvisioningConfig)
     violation_window: int = 24          # completions remembered for v
+    forecast_quantile: float | None = None
     name: str = "carbonflex"
 
     def __post_init__(self) -> None:
         self._recent: deque[bool] = deque(maxlen=self.violation_window)
         self._current_m = 0
+
+    def _ci_view(self, ci):
+        if self.forecast_quantile is None:
+            return ci
+        return QuantileCIView(ci, self.forecast_quantile)
 
     # Policy protocol ------------------------------------------------------
 
@@ -180,7 +195,7 @@ class CarbonFlexPolicy:
         self._backlog_sum += total
         self._backlog_n += 1
         rel = float(total / max(self._backlog_sum / self._backlog_n, 1e-9))
-        state = build_state(ci, t, counts, mean_el, arr24, rel)
+        state = build_state(self._ci_view(ci), t, counts, mean_el, arr24, rel)
         v = float(np.mean(self._recent)) if self._recent else 0.0
         min_required = sum(a.job.k_min for a in live if a.forced)
         m_t, rho = provision(state, self.kb, cluster.capacity, self._current_m,
@@ -210,7 +225,7 @@ class CarbonFlexPolicy:
         self._backlog_sum += total
         self._backlog_n += 1
         rel = float(total / max(self._backlog_sum / self._backlog_n, 1e-9))
-        state = build_state(ci, t, counts, mean_el, arr24, rel)
+        state = build_state(self._ci_view(ci), t, counts, mean_el, arr24, rel)
         v = float(np.mean(self._recent)) if self._recent else 0.0
         forced = rows[eng.slack_left[rows] <= 0]
         min_required = int(ps.k_min[forced].sum())

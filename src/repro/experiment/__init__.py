@@ -14,10 +14,13 @@ The single public entry point for running the paper's pipeline:
                    replay into a rolling KnowledgeBase, policy
                    construction via the registry, batched evaluation
                    through ``simulate_many``;
-- ``Sweep``      — cartesian (regions x seeds x faults x policies) grids
-                   dispatched as one ``simulate_many`` batch, aggregated
-                   by ``SweepResult`` (savings vs a named baseline,
-                   dispersion, JSON round-trip).
+- ``Sweep``      — cartesian (regions x seeds x faults x forecasts x
+                   policies) grids dispatched as one ``simulate_many``
+                   batch, aggregated by ``SweepResult`` (savings vs a
+                   named baseline, dispersion, JSON round-trip);
+- ``OracleGap``  — the §Forecast harness: per-cell savings-gap-to-oracle
+                   under a forecast-error ladder (``sigma_ladder``) and
+                   the degradation curve per policy.
 
 Quickstart::
 
@@ -35,6 +38,8 @@ from . import registry  # noqa: F401
 from .driver import (DEFAULT_DAG_POLICIES, DEFAULT_GEO_POLICIES,  # noqa: F401
                      DEFAULT_POLICIES, ExperimentResult, prepare_context,
                      run)
+from .oracle_gap import (DEFAULT_GAP_POLICIES, OracleGap,  # noqa: F401
+                         OracleGapResult, sigma_ladder)
 from .registry import (PolicyContext, PolicySpec, available_policies,  # noqa: F401
                        make_policy, register_policy)
 from .scenario import WEEK, MaterializedScenario, Scenario  # noqa: F401

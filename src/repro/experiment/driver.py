@@ -48,10 +48,12 @@ def prepare_context(
     policies: Sequence[str],
     kb_kwargs: dict | None = None,
     backend: str = "numpy",
+    forecast_quantile: float = 0.7,
 ) -> PolicyContext:
     """Build the :class:`PolicyContext` for a materialized scenario,
     running the initial learning phase when any requested policy needs the
-    knowledge base."""
+    knowledge base.  ``forecast_quantile`` is the band the ``*-robust``
+    policy variants threshold on."""
     kb = None
     if needs_kb(policies):
         kb = KnowledgeBase(**(kb_kwargs or {}))
@@ -60,7 +62,8 @@ def prepare_context(
     return PolicyContext(
         cluster=mat.cluster, ci=mat.ci, history=list(mat.hist),
         mean_length=mat.mean_length, utilization=mat.scenario.utilization,
-        kb=kb, backend=backend, mci=mat.mci, geo=mat.geo)
+        kb=kb, backend=backend, mci=mat.mci, geo=mat.geo,
+        forecast_quantile=forecast_quantile)
 
 
 def _fresh_faults(scenario: Scenario):
@@ -172,6 +175,7 @@ def run(
     *,
     kb_kwargs: dict | None = None,
     backend: str = "numpy",
+    forecast_quantile: float = 0.7,
     progress: Callable[[str], None] | None = None,
 ) -> ExperimentResult:
     """Run ``scenario`` under the named policies (registry names).
@@ -191,7 +195,8 @@ def run(
     check_scenario_policies(names, scenario.is_geo, scenario.is_dag)
     t_start = time.perf_counter()
     mat = scenario.materialize()
-    ctx = prepare_context(mat, names, kb_kwargs=kb_kwargs, backend=backend)
+    ctx = prepare_context(mat, names, kb_kwargs=kb_kwargs, backend=backend,
+                          forecast_quantile=forecast_quantile)
     instances = {n: make_policy(n, ctx) for n in names}
     weekly: dict[str, list[SimResult]] = {n: [] for n in names}
 

@@ -1,0 +1,234 @@
+"""Oracle-gap harness (ISSUE 5): how far is each policy from the oracle,
+and how fast does it degrade as forecast error grows?
+
+The paper's headline robustness claim is that continuous learning keeps
+CarbonFlex "within ~2% of an oracle scheduler with perfect knowledge of
+future carbon intensity and job length" (§6).  This harness measures that
+gap directly and extends it along the forecast-error axis the paper does
+not evaluate:
+
+- for every grid cell (region x seed x fault x forecast model) it runs
+  the requested policies *plus the oracle* (which reads the true trace,
+  so it is forecast-independent by construction) against the same
+  baseline;
+- the **oracle gap** of a policy in a cell is
+  ``oracle_savings_pct - policy_savings_pct`` (percentage points of
+  baseline carbon left on the table);
+- the **degradation curve** is the mean gap per forecast model, in the
+  order the forecast axis was given (typically a sigma ladder: perfect,
+  then AR(1) noise of growing sigma).
+
+Usage (also the EXPERIMENTS.md §Forecast generator)::
+
+    from repro.experiment.oracle_gap import OracleGap, sigma_ladder
+
+    res = OracleGap(base=Scenario(capacity=40), seeds=(1, 2, 3),
+                    forecasts=sigma_ladder((0.0, 0.1, 0.2, 0.4))).run()
+    print(res.table())
+    res.degradation_curve("carbonflex")   # [(label, mean_gap_pp), ...]
+
+CLI: ``PYTHONPATH=src python -m repro.experiment.oracle_gap [--tiny]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.forecast import (ForecastModel, NoisyForecast,
+                                 QuantileForecast, forecast_labels)
+
+from .scenario import Scenario
+from .sweep import Sweep
+
+#: Policies whose oracle gap the §Forecast study tracks: the learned
+#: CarbonFlex pipeline and the threshold baseline, each with its
+#: quantile-robust variant.
+DEFAULT_GAP_POLICIES: tuple[str, ...] = (
+    "carbonflex", "carbonflex-robust", "wait-awhile", "wait-awhile-robust",
+)
+
+
+def sigma_ladder(sigmas: Sequence[float] = (0.0, 0.1, 0.2, 0.4),
+                 kind: str = "noisy", seed: int = 0,
+                 **kw) -> tuple[ForecastModel | None, ...]:
+    """A forecast-error ladder for the degradation curve: ``sigma == 0``
+    is the perfect forecast (``None``), the rest AR(1) ``noisy`` or
+    ensemble ``quantile`` models of growing sigma."""
+    if kind not in ("noisy", "quantile"):
+        raise ValueError(f"kind must be 'noisy' or 'quantile', got {kind!r}")
+    cls = NoisyForecast if kind == "noisy" else QuantileForecast
+    return tuple(None if s == 0 else cls(sigma=s, seed=seed, **kw)
+                 for s in sigmas)
+
+
+@dataclasses.dataclass
+class OracleGap:
+    """Declarative oracle-gap study: a :class:`Sweep` over a forecast
+    ladder with the oracle added, reduced to per-cell gaps."""
+
+    base: Scenario = dataclasses.field(default_factory=Scenario)
+    policies: Sequence[str] = DEFAULT_GAP_POLICIES
+    forecasts: Sequence[ForecastModel | None] = \
+        dataclasses.field(default_factory=sigma_ladder)
+    regions: Sequence[str] = ()
+    seeds: Sequence[int] = ()
+    baseline: str = "carbon-agnostic"
+    backend: str = "numpy"
+    # quantile the *-robust policy variants threshold on
+    forecast_quantile: float = 0.7
+
+    def sweep(self) -> Sweep:
+        names = tuple(self.policies)
+        if "oracle" not in names:
+            names = names + ("oracle",)
+        return Sweep(base=self.base, regions=self.regions, seeds=self.seeds,
+                     policies=names, forecasts=tuple(self.forecasts),
+                     forecast_quantile=self.forecast_quantile,
+                     baseline=self.baseline, backend=self.backend)
+
+    def run(self, progress: Callable[[str], None] | None = None
+            ) -> "OracleGapResult":
+        sweep = self.sweep()
+        rows = sweep.run(progress=progress).rows()
+        cell = lambda r: (r["region"], r["seed"], r["fault"], r["forecast"])  # noqa: E731
+        oracle_sv = {cell(r): r["savings_pct"]
+                     for r in rows if r["policy"] == "oracle"}
+        gap_rows = []
+        for r in rows:
+            if r["policy"] == "oracle":
+                continue
+            gap_rows.append({
+                "region": r["region"], "seed": r["seed"], "fault": r["fault"],
+                "forecast": r["forecast"], "policy": r["policy"],
+                "savings_pct": r["savings_pct"],
+                "oracle_savings_pct": oracle_sv[cell(r)],
+                "gap_pp": round(oracle_sv[cell(r)] - r["savings_pct"], 3),
+            })
+        # the same disambiguated labels Sweep stamps on the rows;
+        # dict.fromkeys dedupes (equal models only) while keeping order
+        order = forecast_labels(self.forecasts)
+        return OracleGapResult(baseline=sweep.effective_baseline(),
+                               forecast_order=list(dict.fromkeys(order)),
+                               rows_=gap_rows)
+
+
+@dataclasses.dataclass
+class OracleGapResult:
+    """Per-cell gap rows + the aggregates EXPERIMENTS.md §Forecast cites."""
+
+    baseline: str
+    forecast_order: list[str]
+    rows_: list[dict]
+
+    def rows(self) -> list[dict]:
+        return self.rows_
+
+    def policies(self) -> list[str]:
+        return list(dict.fromkeys(r["policy"] for r in self.rows_))
+
+    def summary(self) -> dict[str, dict[str, dict]]:
+        """``{forecast_label: {policy: {savings/gap mean +- std}}}`` in
+        ladder order.  Cached: the rows are immutable after ``run()``,
+        and table()/curves/to_json all reduce over the same aggregates."""
+        cached = self.__dict__.get("_summary")
+        if cached is not None:
+            return cached
+        out: dict[str, dict[str, dict]] = {}
+        for fc in self.forecast_order:
+            out[fc] = {}
+            for pol in self.policies():
+                rs = [r for r in self.rows_
+                      if r["forecast"] == fc and r["policy"] == pol]
+                if not rs:
+                    continue
+                sv = np.array([r["savings_pct"] for r in rs])
+                gap = np.array([r["gap_pp"] for r in rs])
+                out[fc][pol] = {
+                    "n_cases": len(rs),
+                    "savings_mean_pct": round(float(sv.mean()), 3),
+                    "savings_std_pct": round(float(sv.std()), 3),
+                    "gap_mean_pp": round(float(gap.mean()), 3),
+                    "gap_std_pp": round(float(gap.std()), 3),
+                }
+        self._summary = out
+        return out
+
+    def perfect_gap(self, policy: str) -> float:
+        """Mean gap-to-oracle (pp) under the perfect forecast — the
+        paper's ~2% claim, measured."""
+        return self.summary()["perfect"][policy]["gap_mean_pp"]
+
+    def degradation_curve(self, policy: str) -> list[tuple[str, float]]:
+        """``[(forecast_label, mean_gap_pp), ...]`` in ladder order."""
+        s = self.summary()
+        return [(fc, s[fc][policy]["gap_mean_pp"])
+                for fc in self.forecast_order if policy in s[fc]]
+
+    def table(self) -> str:
+        lines = [f"{'forecast':22s} {'policy':20s} {'savings%':>9s} "
+                 f"{'gap pp':>7s} {'±std':>6s} {'cases':>6s}"]
+        for fc, pols in self.summary().items():
+            for pol, s in pols.items():
+                lines.append(
+                    f"{fc:22s} {pol:20s} {s['savings_mean_pct']:9.2f} "
+                    f"{s['gap_mean_pp']:7.2f} {s['gap_std_pp']:6.2f} "
+                    f"{s['n_cases']:6d}")
+        return "\n".join(lines)
+
+    def to_json(self, indent: int | None = 1) -> str:
+        return json.dumps({"baseline": self.baseline,
+                           "forecast_order": self.forecast_order,
+                           "rows": self.rows_,
+                           "summary": self.summary()}, indent=indent)
+
+    @classmethod
+    def from_json(cls, payload: str) -> "OracleGapResult":
+        d = json.loads(payload)
+        return cls(baseline=d["baseline"],
+                   forecast_order=d["forecast_order"], rows_=d["rows"])
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-scale smoke (small capacity, 1 seed, 2-point "
+                         "ladder)")
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--capacity", type=int, default=40)
+    ap.add_argument("--region", default="south-australia")
+    ap.add_argument("--kind", default="noisy",
+                    choices=("noisy", "quantile"))
+    ap.add_argument("--out", default=None, help="write result JSON here")
+    args = ap.parse_args()
+
+    if args.tiny:
+        base = Scenario(region=args.region, capacity=8, learn_weeks=1,
+                        family="alibaba", seed=101)
+        gap = OracleGap(base=base, seeds=(11,),
+                        forecasts=sigma_ladder((0.0, 0.2), kind=args.kind))
+    else:
+        base = Scenario(region=args.region, capacity=args.capacity,
+                        learn_weeks=2, seed=7)
+        gap = OracleGap(base=base,
+                        seeds=tuple(range(1, args.seeds + 1)),
+                        forecasts=sigma_ladder(kind=args.kind))
+    res = gap.run(progress=print)
+    print(res.table())
+    for pol in res.policies():
+        curve = ", ".join(f"{fc}={g:+.2f}pp"
+                          for fc, g in res.degradation_curve(pol))
+        print(f"degradation[{pol}]: {curve}")
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(res.to_json())
+            f.write("\n")
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

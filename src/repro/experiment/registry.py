@@ -40,6 +40,9 @@ class PolicyContext:
     utilization: float = 0.5
     kb: KnowledgeBase | None = None
     backend: str = "numpy"           # oracle backend for oracle/learning
+    # quantile the `*-robust` policy variants threshold on (configurable
+    # per experiment; 0.7 = mildly conservative upper band)
+    forecast_quantile: float = 0.7
     # Geo-scenario context (None for single-region scenarios).
     mci: MultiRegionCarbonService | None = None
     geo: GeoCluster | None = None
@@ -160,6 +163,14 @@ def _wait_awhile(ctx: PolicyContext) -> Policy:
     return baselines.WaitAwhilePolicy()
 
 
+@register_policy("wait-awhile-robust",
+                 description="wait-awhile thresholding on a conservative "
+                             "forecast quantile instead of the point "
+                             "forecast (forecast-error robust)")
+def _wait_awhile_robust(ctx: PolicyContext) -> Policy:
+    return baselines.RobustWaitAwhilePolicy(quantile=ctx.forecast_quantile)
+
+
 @register_policy("carbonscaler",
                  description="per-job elastic CarbonScaler plans, cluster-reconciled")
 def _carbonscaler(ctx: PolicyContext) -> Policy:
@@ -181,6 +192,16 @@ def _vcc_scaling(ctx: PolicyContext) -> Policy:
                  description="CarbonFlex KNN execution phase (Algorithms 2+3)")
 def _carbonflex(ctx: PolicyContext) -> Policy:
     return CarbonFlexPolicy(ctx.require_kb())
+
+
+@register_policy("carbonflex-robust", needs_kb=True,
+                 description="carbonflex with Table-2 forecast features "
+                             "computed on a conservative forecast quantile "
+                             "(forecast-error robust)")
+def _carbonflex_robust(ctx: PolicyContext) -> Policy:
+    return CarbonFlexPolicy(ctx.require_kb(),
+                            forecast_quantile=ctx.forecast_quantile,
+                            name="carbonflex-robust")
 
 
 @register_policy("carbonflex-mpc", needs_history=True,

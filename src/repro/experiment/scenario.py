@@ -16,6 +16,8 @@ import dataclasses
 
 from repro.core.carbon import (REGIONS, CarbonService,
                                MultiRegionCarbonService)
+from repro.core.forecast import (ForecastModel, forecast_from_dict,
+                                 forecast_to_dict)
 from repro.core.simulator import FaultModel
 from repro.core.types import (ClusterConfig, GeoCluster, Job, MigrationModel,
                               QueueConfig, default_queues)
@@ -80,6 +82,14 @@ class Scenario:
     is then ignored).  ``migration`` overrides the default
     :class:`MigrationModel` cost knobs.
 
+    ``forecast`` selects the carbon-forecast model every policy sees
+    (``core/forecast.py``): ``None`` keeps the paper's accurate-day-ahead
+    assumption (:class:`~repro.core.forecast.PerfectForecast`,
+    bit-identical to the pre-subsystem behaviour); pass
+    ``NoisyForecast``/``QuantileForecast``/``PersistenceForecast`` to
+    stress robustness to forecast error.  The true trace (and hence the
+    oracle, which reads it directly) is unaffected.
+
     A non-``None`` ``dag`` (:class:`repro.traces.DagConfig`) makes the
     workload precedence-aware: the trace generator emits whole DAG jobs
     (chains / map-reduce stages / random layered DAGs) expanded to tasks
@@ -93,6 +103,9 @@ class Scenario:
     regions: tuple[str, ...] = ()
     migration: MigrationModel | None = None
     dag: DagConfig | None = None        # DAG workload (precedence gating)
+    # Forecast model policies see (core/forecast.py); None = PerfectForecast
+    # (the paper's accurate-day-ahead assumption, bit-identical to before).
+    forecast: ForecastModel | None = None
     family: str = "azure"
     capacity: int = 60
     utilization: float = 0.5
@@ -179,7 +192,8 @@ class Scenario:
         mci = geo = None
         if self.is_geo:
             mci = MultiRegionCarbonService.synthetic(
-                self.regions, self.hours + CI_MARGIN_HOURS, seed=self.seed)
+                self.regions, self.hours + CI_MARGIN_HOURS, seed=self.seed,
+                model=self.forecast)
             geo = GeoCluster.split(self.capacity, self.regions,
                                    queues=self.queues(),
                                    migration=self.migration)
@@ -187,7 +201,8 @@ class Scenario:
         else:
             ci = CarbonService.synthetic(self.region,
                                          self.hours + CI_MARGIN_HOURS,
-                                         seed=self.seed)
+                                         seed=self.seed,
+                                         model=self.forecast)
         spec = self.trace_spec()
 
         def _gen(s: TraceSpec) -> list[Job]:
@@ -229,6 +244,7 @@ class Scenario:
         if self.dag is not None:
             d["dag"] = {**dataclasses.asdict(self.dag),
                         "shapes": list(self.dag.shapes)}
+        d["forecast"] = forecast_to_dict(self.forecast)
         return d
 
     @classmethod
@@ -241,4 +257,6 @@ class Scenario:
             d["migration"] = MigrationModel(**d["migration"])
         if d.get("dag"):
             d["dag"] = DagConfig(**d["dag"])
+        if d.get("forecast"):
+            d["forecast"] = forecast_from_dict(d["forecast"])
         return cls(**d)

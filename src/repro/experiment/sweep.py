@@ -21,6 +21,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from repro.core.forecast import ForecastModel, forecast_labels
 from repro.core.simulator import FaultModel, SimCase, simulate_many
 from repro.core.types import SimResult
 
@@ -42,8 +43,11 @@ class Sweep:
     ``regions`` / ``seeds`` default to the base scenario's single values;
     ``faults`` is an explicit fault axis (``None`` entry = fault-free) —
     when omitted it defaults to the base scenario's own fault model.
-    ``baseline`` names the policy savings are measured against — it is
-    added to the run automatically if missing.
+    ``forecasts`` is a forecast-model axis (``None`` entry = perfect
+    forecast); rows then carry a ``"forecast"`` label and savings compare
+    within the same forecast model.  ``baseline`` names the policy
+    savings are measured against — it is added to the run automatically
+    if missing.
 
     Geo sweeps: when the base scenario carries a ``regions`` tuple the
     whole grid is geo-distributed — the sweep's own single-region
@@ -64,6 +68,15 @@ class Sweep:
     seeds: Sequence[int] = ()
     policies: Sequence[str] = DEFAULT_POLICIES
     faults: Sequence[FaultModel | None] | None = None
+    # Forecast-model grid axis (ISSUE 5): each entry replaces the base
+    # scenario's `forecast` (None = PerfectForecast), e.g. a
+    # forecast-model x sigma grid `[None, NoisyForecast(sigma=0.1),
+    # NoisyForecast(sigma=0.2), QuantileForecast(sigma=0.2)]`.  Rows gain
+    # a "forecast" label column only when the axis is in play, keeping
+    # pre-forecast sweep payloads (and their golden fixtures) unchanged.
+    forecasts: Sequence[ForecastModel | None] | None = None
+    # quantile the *-robust policy variants threshold on
+    forecast_quantile: float = 0.7
     baseline: str = "carbon-agnostic"
     backend: str = "numpy"
     kb_kwargs: dict | None = None
@@ -72,6 +85,14 @@ class Sweep:
         if self.faults is None:
             return (self.base.faults,)
         return tuple(self.faults)
+
+    def forecast_axis(self) -> tuple[ForecastModel | None, ...]:
+        if self.forecasts is None:
+            return (self.base.forecast,)
+        return tuple(self.forecasts)
+
+    def has_forecast_axis(self) -> bool:
+        return self.forecasts is not None or self.base.forecast is not None
 
     def effective_baseline(self) -> str:
         """The status-quo policy of the grid's kind replaces the
@@ -90,10 +111,13 @@ class Sweep:
                     "a geo base scenario fixes the region tuple; sweep the "
                     "seeds axis (or run one sweep per region tuple) instead "
                     "of the single-region regions axis")
-            return [dataclasses.replace(self.base, seed=s) for s in seeds]
-        regions = tuple(self.regions) or (self.base.region,)
-        return [dataclasses.replace(self.base, region=r, seed=s)
-                for r in regions for s in seeds]
+            bases = [dataclasses.replace(self.base, seed=s) for s in seeds]
+        else:
+            regions = tuple(self.regions) or (self.base.region,)
+            bases = [dataclasses.replace(self.base, region=r, seed=s)
+                     for r in regions for s in seeds]
+        return [dataclasses.replace(b, forecast=f)
+                for b in bases for f in self.forecast_axis()]
 
     def _policy_names(self) -> tuple[str, ...]:
         names = tuple(self.policies)
@@ -106,16 +130,30 @@ class Sweep:
     def run(self, progress: Callable[[str], None] | None = None) -> "SweepResult":
         names = self._policy_names()
         baseline = self.effective_baseline()
+        with_forecast = self.has_forecast_axis()
+        # Disambiguated per-axis-entry labels (e.g. two NoisyForecasts of
+        # equal sigma but different seed -> "noisy(s=0.2)"/"noisy(s=0.2)#2")
+        # so the per-cell savings grouping below cannot merge distinct
+        # models.  scenarios() expands bases x forecast axis with the
+        # forecast as the innermost loop, so the labels tile in order.
+        axis_labels = forecast_labels(self.forecast_axis())
+        scenarios = self.scenarios()
+        # an explicitly empty forecasts axis yields zero scenarios, like
+        # faults=[] yields zero rows — nothing to tile then
+        assert not axis_labels or len(scenarios) % len(axis_labels) == 0
         cases: list[SimCase] = []
         meta: list[dict] = []
-        for sc in self.scenarios():
+        for i, sc in enumerate(scenarios):
             mat = sc.materialize()
             region_label = "+".join(sc.regions) if sc.is_geo else sc.region
+            fc_label = axis_labels[i % len(axis_labels)]
             ctx = prepare_context(mat, names, kb_kwargs=self.kb_kwargs,
-                                  backend=self.backend)
+                                  backend=self.backend,
+                                  forecast_quantile=self.forecast_quantile)
             if progress is not None:
-                progress(f"prepared {region_label}/seed{sc.seed}: "
-                         f"{len(mat.eval_jobs)} eval jobs"
+                progress(f"prepared {region_label}/seed{sc.seed}"
+                         + (f"/{fc_label}" if with_forecast else "")
+                         + f": {len(mat.eval_jobs)} eval jobs"
                          + (f", kb={len(ctx.kb)}" if ctx.kb is not None else ""))
             horizon = sc.eval_weeks * WEEK
             ci_c = mat.mci if mat.is_geo else mat.ci
@@ -127,9 +165,13 @@ class Sweep:
                         jobs=mat.eval_jobs, ci=ci_c, cluster=cluster_c,
                         policy=make_policy(name, ctx), t0=mat.t0,
                         horizon=horizon, faults=_fresh_faults(scf),
-                        label=f"{region_label}/s{sc.seed}/{fault_label(fm)}/{name}"))
-                    meta.append({"region": region_label, "seed": sc.seed,
-                                 "fault": fault_label(fm), "policy": name})
+                        label=f"{region_label}/s{sc.seed}/{fault_label(fm)}/{name}"
+                              + (f"/{fc_label}" if with_forecast else "")))
+                    row = {"region": region_label, "seed": sc.seed,
+                           "fault": fault_label(fm), "policy": name}
+                    if with_forecast:
+                        row["forecast"] = fc_label
+                    meta.append(row)
         results = simulate_many(cases)       # one batched dispatch
         rows = []
         for m, r in zip(meta, results):
@@ -140,10 +182,15 @@ class Sweep:
 
 
 def _attach_savings(rows: list[dict], baseline: str) -> None:
-    base_carbon = {(r["region"], r["seed"], r["fault"]): r["carbon_g"]
+    def key(r: dict):
+        # the "forecast" column exists only on forecast-axis sweeps;
+        # savings always compare within the same forecast model
+        return (r["region"], r["seed"], r["fault"], r.get("forecast", ""))
+
+    base_carbon = {key(r): r["carbon_g"]
                    for r in rows if r["policy"] == baseline}
     for r in rows:
-        base = base_carbon.get((r["region"], r["seed"], r["fault"]), 0.0)
+        base = base_carbon.get(key(r), 0.0)
         r["savings_pct"] = round(100.0 * (1.0 - r["carbon_g"] / base), 3) \
             if base > 0 else 0.0
 

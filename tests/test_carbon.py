@@ -14,6 +14,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.carbon import (REGIONS, CarbonService,
                                MultiRegionCarbonService, synthesize_trace)
+from repro.core.forecast import StaticNoiseForecast
 
 
 class TestForecastEdges:
@@ -60,10 +61,18 @@ class TestForecastEdges:
 
 
 class TestForecastNoise:
+    """The static ``forecast_noise`` knob is deprecated since ISSUE-5 (it
+    became the ``StaticNoiseForecast`` shim): every construction below
+    must warn while reproducing the old outputs bit-for-bit (pinned in
+    tests/test_forecast.py::TestDeprecatedShim)."""
+
     def test_noisy_forecast_deterministic_per_seed(self):
         trace = synthesize_trace("texas", 24 * 7, seed=2)
-        mk = lambda s: CarbonService(trace=trace, forecast_noise=0.2,  # noqa: E731
-                                     seed=s)
+
+        def mk(s):
+            with pytest.warns(DeprecationWarning, match="forecast_noise"):
+                return CarbonService(trace=trace, forecast_noise=0.2, seed=s)
+
         a, b = mk(11), mk(11)
         np.testing.assert_array_equal(a.forecast(0, 48), b.forecast(0, 48))
         c = mk(12)
@@ -71,7 +80,8 @@ class TestForecastNoise:
 
     def test_noise_perturbs_forecast_not_trace(self):
         trace = synthesize_trace("texas", 24 * 7, seed=2)
-        svc = CarbonService(trace=trace, forecast_noise=0.2, seed=7)
+        with pytest.warns(DeprecationWarning, match="forecast_noise"):
+            svc = CarbonService(trace=trace, forecast_noise=0.2, seed=7)
         assert not np.array_equal(svc.forecast(0, 24), trace[:24])
         np.testing.assert_array_equal(svc.trace, trace)   # truth untouched
         assert svc.ci(5) == float(trace[5])
@@ -88,9 +98,10 @@ def _check_forecast_properties(t: int, horizon: int, noise: float,
     """Any t, any horizon >= 1: finite values, exact length, deterministic
     per seed (including at/past the trace end and with forecast noise)."""
     hours = 24 * 4
+    model = StaticNoiseForecast(sigma=noise, seed=seed) if noise else None
     mk = lambda: CarbonService(  # noqa: E731
         trace=synthesize_trace("germany", hours, seed=seed),
-        forecast_noise=noise, seed=seed)
+        seed=seed, model=model)
     a, b = mk(), mk()
     for svc in (a, b):
         fc = svc.forecast(t, horizon)

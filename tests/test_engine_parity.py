@@ -5,12 +5,14 @@ paths, batched fault draws) must reproduce the scalar reference engine's
 ``SimResult`` exactly — same ``carbon_g``/``energy_kwh`` floats, same
 completion/violation/wait arrays, same per-slot logs — on seeded
 scenarios, for every policy, with and without fault injection."""
+import dataclasses
+
 import numpy as np
 import pytest
 
 from repro.core import (CarbonFlexPolicy, CarbonService, ClusterConfig,
-                        KnowledgeBase, OraclePolicy, baselines, learn_window,
-                        simulate)
+                        KnowledgeBase, NoisyForecast, OraclePolicy,
+                        QuantileForecast, baselines, learn_window, simulate)
 from repro.core.policy import CarbonFlexMPCPolicy
 from repro.core.simulator import FaultModel, SimCase, simulate_many
 from repro.core.types import Job
@@ -89,6 +91,38 @@ def test_engines_identical_under_faults(world, policy_name, fault_seed):
     rv = simulate(ev, ci, cluster, mk(), t0=WEEK, horizon=WEEK,
                   engine="vector", faults=mk_faults())
     assert_results_identical(rs, rv, f"{policy_name}+faults")
+
+
+FORECASTS = {"noisy": NoisyForecast(sigma=0.3, seed=5),
+             "quantile": QuantileForecast(sigma=0.3, seed=5, members=5)}
+
+
+@pytest.mark.parametrize("policy_name", [
+    "wait-awhile", "wait-awhile-robust", "gaia", "carbonscaler",
+    "carbonflex", "carbonflex-robust", "carbonflex-mpc"])
+@pytest.mark.parametrize("forecast", sorted(FORECASTS))
+@pytest.mark.parametrize("faulty", [False, True])
+def test_engines_identical_under_noisy_forecasts(world, policy_name,
+                                                 forecast, faulty):
+    """Forecast consumption must not diverge between engine paths
+    (ISSUE-5): both engines see the same realized error stream per query
+    slot, so results stay bit-identical under NoisyForecast /
+    QuantileForecast, with and without fault injection."""
+    cluster, ci, hist, ev, kb = world
+    ci_f = dataclasses.replace(ci, model=FORECASTS[forecast])
+    mk = {**_mk_policies(kb, hist),
+          "wait-awhile-robust": baselines.RobustWaitAwhilePolicy,
+          "carbonflex-robust": lambda: CarbonFlexPolicy(
+              kb, forecast_quantile=0.7, name="carbonflex-robust"),
+          }[policy_name]
+    mk_faults = (lambda: FaultModel(straggler_rate=0.15, failure_rate=0.05,
+                                    seed=3)) if faulty else (lambda: None)
+    rs = simulate(ev, ci_f, cluster, mk(), t0=WEEK, horizon=WEEK,
+                  engine="scalar", faults=mk_faults())
+    rv = simulate(ev, ci_f, cluster, mk(), t0=WEEK, horizon=WEEK,
+                  engine="vector", faults=mk_faults())
+    assert_results_identical(rs, rv, f"{policy_name}+{forecast}")
+    assert (rv.completion >= 0).all()
 
 
 def test_fault_batch_draws_match_sequential_stream():

@@ -1,0 +1,496 @@
+"""Forecast subsystem (ISSUE 5): model properties, the lead-time fix, the
+deprecated ``forecast_noise`` shim, robust policy variants, and the
+Scenario/Sweep threading.
+
+Property families (hypothesis sweeps + fixed-seed smoke twins, as in
+tests/test_property_engine.py):
+
+- determinism per seed, exact horizon length at/past the trace end, and
+  positivity for EVERY model;
+- ``PerfectForecast`` bit-identical to the ground-truth
+  ``CarbonService.forecast`` slice;
+- quantile monotonicity (q10 <= q50 <= q90) at every horizon;
+- the lead-time fix: the realized error of a future slot depends on the
+  query slot and statistically shrinks as the slot approaches — the old
+  static ``forecast_noise`` knob (one realization per trace) is pinned as
+  the deprecated shim, warning while matching old outputs bit-for-bit.
+"""
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CarbonService
+from repro.core.baselines import RobustWaitAwhilePolicy, WaitAwhilePolicy
+from repro.core.carbon import synthesize_trace
+from repro.core.forecast import (FORECAST_KINDS, ForecastModel,
+                                 NoisyForecast, PerfectForecast,
+                                 PersistenceForecast, QuantileCIView,
+                                 QuantileForecast, StaticNoiseForecast,
+                                 _norm_ppf, forecast_from_dict,
+                                 forecast_label, forecast_to_dict)
+from repro.experiment import Scenario, Sweep
+
+HOURS = 24 * 6
+
+MODELS = {
+    "perfect": PerfectForecast(),
+    "persistence": PersistenceForecast(),
+    "noisy": NoisyForecast(sigma=0.2, seed=3),
+    "quantile": QuantileForecast(sigma=0.2, seed=3, members=7),
+    "static-noise": StaticNoiseForecast(sigma=0.2, seed=3),
+}
+
+
+def _mk_model(kind: str, seed: int) -> ForecastModel:
+    if kind == "perfect":
+        return PerfectForecast()
+    if kind == "persistence":
+        return PersistenceForecast()
+    if kind == "noisy":
+        return NoisyForecast(sigma=0.3, seed=seed)
+    if kind == "quantile":
+        return QuantileForecast(sigma=0.3, seed=seed, members=5)
+    return StaticNoiseForecast(sigma=0.3, seed=seed)
+
+
+# --- core model properties ---------------------------------------------------
+
+
+def _check_model_properties(kind: str, t: int, horizon: int,
+                            seed: int) -> None:
+    """Any model, any t (incl. past the trace end), any horizon >= 1:
+    exact length, finite, non-negative, deterministic per seed."""
+    trace = synthesize_trace("germany", HOURS, seed=seed)
+    a, b = _mk_model(kind, seed), _mk_model(kind, seed)
+    fa, fb = a.predict(trace, t, horizon), b.predict(trace, t, horizon)
+    assert len(fa) == horizon
+    assert np.isfinite(fa).all()
+    assert (fa >= 0.0).all()
+    np.testing.assert_array_equal(fa, fb)          # deterministic per seed
+    # a longer horizon extends, never rewrites, the shorter one
+    np.testing.assert_array_equal(
+        a.predict(trace, t, horizon + 5)[:horizon], fa)
+    # the current slot is observed: no model invents error at lead 0
+    if kind != "static-noise" and t < len(trace):
+        assert fa[0] == trace[t]
+    qfn = getattr(a, "quantile", None)
+    if qfn is not None:
+        q10 = qfn(trace, t, horizon, 0.1)
+        q50 = qfn(trace, t, horizon, 0.5)
+        q90 = qfn(trace, t, horizon, 0.9)
+        for q in (q10, q50, q90):
+            assert len(q) == horizon and np.isfinite(q).all()
+        assert (q10 <= q50 + 1e-9).all()           # quantile monotonicity
+        assert (q50 <= q90 + 1e-9).all()
+
+
+class TestModelProperties:
+    @pytest.mark.parametrize("kind", sorted(MODELS))
+    @pytest.mark.parametrize("t,horizon", [
+        (0, 24), (50, 24), (HOURS - 1, 24), (HOURS, 24), (HOURS + 100, 24),
+        (10, 1), (10, 100)])
+    def test_fixed(self, kind, t, horizon):
+        _check_model_properties(kind, t, horizon, seed=13)
+
+    @settings(max_examples=40, deadline=None)
+    @given(kind=st.sampled_from(sorted(MODELS)),
+           t=st.integers(0, HOURS + 48), horizon=st.integers(1, 24 * 5),
+           seed=st.integers(0, 1000))
+    def test_property(self, kind, t, horizon, seed):
+        _check_model_properties(kind, t, horizon, seed)
+
+    def test_distinct_seeds_give_distinct_noise(self):
+        trace = synthesize_trace("texas", HOURS, seed=2)
+        a = NoisyForecast(sigma=0.2, seed=1).predict(trace, 5, 24)
+        b = NoisyForecast(sigma=0.2, seed=2).predict(trace, 5, 24)
+        assert not np.array_equal(a, b)
+
+    def test_quantile_ensemble_needs_members(self):
+        with pytest.raises(ValueError, match="members"):
+            QuantileForecast(members=1)
+
+    def test_norm_ppf_matches_known_values(self):
+        # reference values of the standard normal inverse CDF
+        for q, z in [(0.5, 0.0), (0.841344746, 1.0), (0.158655254, -1.0),
+                     (0.975, 1.959964), (0.01, -2.326348)]:
+            assert _norm_ppf(q) == pytest.approx(z, abs=1e-5)
+        with pytest.raises(ValueError):
+            _norm_ppf(0.0)
+
+
+class TestPerfectForecast:
+    def test_bit_identical_to_ground_truth_service(self):
+        """PerfectForecast output == CarbonService.forecast ground truth,
+        bit for bit, including the pad-at-end and zeros-past-end edges."""
+        trace = synthesize_trace("california", HOURS, seed=5)
+        svc = CarbonService(trace=trace)                 # default = perfect
+        model = PerfectForecast()
+        for t in (0, 7, HOURS - 3, HOURS, HOURS + 50):
+            for h in (1, 24, 60):
+                np.testing.assert_array_equal(
+                    model.predict(trace, t, h), svc.forecast(t, h))
+        assert isinstance(svc.model, PerfectForecast)
+
+    def test_explicit_model_equals_default(self):
+        trace = synthesize_trace("california", HOURS, seed=5)
+        a = CarbonService(trace=trace)
+        b = CarbonService(trace=trace, model=PerfectForecast())
+        np.testing.assert_array_equal(a.forecast(3, 48), b.forecast(3, 48))
+        np.testing.assert_array_equal(a.forecast_quantile(3, 24, 0.9),
+                                      a.forecast(3, 24))
+
+
+class TestPersistence:
+    def test_yesterday_as_tomorrow_no_peeking(self):
+        trace = np.arange(1.0, HOURS + 1)
+        fc = PersistenceForecast().predict(trace, 30, 24)
+        assert fc[0] == trace[30]                        # now is observed
+        np.testing.assert_array_equal(fc[1:], trace[7:30])
+        # nothing beyond slot t is ever read
+        assert fc.max() <= trace[30]
+
+    def test_tiles_yesterday_past_one_period(self):
+        trace = np.arange(1.0, HOURS + 1)
+        fc = PersistenceForecast().predict(trace, 48, 49)
+        np.testing.assert_array_equal(fc[25:49], fc[1:25])
+
+    def test_first_day_clamps_into_trace(self):
+        trace = np.arange(1.0, HOURS + 1)
+        fc = PersistenceForecast().predict(trace, 0, 24)
+        assert np.isfinite(fc).all()
+        # with no yesterday to read, every lead clamps to slot 0: nothing
+        # after the current slot is ever consulted
+        assert (fc <= trace[0]).all()
+
+
+# --- the lead-time fix -------------------------------------------------------
+
+
+class TestLeadTimeSemantics:
+    """Pin the ISSUE-5 fix: the old knob drew ONE noise realization over
+    the whole trace at construction, so two queries at different t saw
+    the same realized error for the same future slot regardless of lead
+    time.  NoisyForecast re-draws per query slot with a lead-dependent
+    std."""
+
+    def test_static_shim_error_ignores_lead_time(self):
+        trace = synthesize_trace("texas", HOURS, seed=2)
+        model = StaticNoiseForecast(sigma=0.3, seed=9)
+        s = 40                                            # absolute slot
+        far = model.predict(trace, s - 20, 24)[20]        # 20h lead
+        near = model.predict(trace, s - 1, 24)[1]         # 1h lead
+        assert far == near                                # the old bug
+
+    def test_noisy_error_depends_on_query_slot(self):
+        trace = synthesize_trace("texas", HOURS, seed=2)
+        model = NoisyForecast(sigma=0.3, seed=9)
+        s = 40
+        far = model.predict(trace, s - 20, 24)[20]
+        near = model.predict(trace, s - 1, 24)[1]
+        assert far != near                                # fresh draw per t
+
+    def test_noisy_error_std_grows_with_lead_time(self):
+        """Across many query slots, the empirical relative-error std at
+        long leads exceeds short leads and tracks the analytic band."""
+        trace = synthesize_trace("texas", 24 * 40, seed=2)
+        model = NoisyForecast(sigma=0.3, phi=0.9, seed=9)
+        errs = {1: [], 6: [], 23: []}
+        for t in range(0, 24 * 30):
+            fc = model.predict(trace, t, 24)
+            for h in errs:
+                errs[h].append(fc[h] / trace[t + h] - 1.0)
+        stds = {h: float(np.std(v)) for h, v in errs.items()}
+        assert stds[1] < stds[6] < stds[23]
+        band = model.lead_std(24)
+        for h in errs:
+            # clipping at the floor only tightens the spread
+            assert stds[h] == pytest.approx(band[h], rel=0.25)
+        # lead 0 is the observed slot: zero error always
+        fc0 = model.predict(trace, 100, 24)
+        assert fc0[0] == trace[100]
+
+    def test_requery_is_deterministic_per_slot(self):
+        trace = synthesize_trace("texas", HOURS, seed=2)
+        model = NoisyForecast(sigma=0.3, seed=9)
+        np.testing.assert_array_equal(model.predict(trace, 12, 24),
+                                      model.predict(trace, 12, 24))
+
+
+# --- deprecated forecast_noise shim ------------------------------------------
+
+
+class TestDeprecatedShim:
+    def test_shim_warns_and_matches_old_outputs_bit_for_bit(self):
+        trace = synthesize_trace("texas", HOURS, seed=2)
+        with pytest.warns(DeprecationWarning, match="forecast_noise"):
+            svc = CarbonService(trace=trace, forecast_noise=0.2, seed=7)
+        # the pre-subsystem implementation, verbatim
+        noise = np.random.default_rng(7).normal(1.0, 0.2, len(trace))
+        legacy = np.clip(trace * noise, 1.0, None)
+        for t in (0, 10, HOURS - 5):
+            want = legacy[t:t + 24]
+            if len(want) < 24:                      # old pad-at-end rule
+                want = np.concatenate([want, np.full(24 - len(want),
+                                                     want[-1])])
+            np.testing.assert_array_equal(svc.forecast(t, 24), want)
+        np.testing.assert_array_equal(svc.trace, trace)   # truth untouched
+        assert isinstance(svc.model, StaticNoiseForecast)
+
+    def test_shim_and_model_are_mutually_exclusive(self):
+        trace = synthesize_trace("texas", 24, seed=2)
+        with pytest.raises(ValueError, match="not both"):
+            CarbonService(trace=trace, forecast_noise=0.2,
+                          model=NoisyForecast())
+
+    def test_replace_on_shim_built_service_keeps_model(self):
+        """The knob is consumed into the model at construction, so
+        dataclasses.replace on a shim-built service must not re-trip the
+        model-xor-knob validation."""
+        import dataclasses
+
+        trace = synthesize_trace("texas", 24 * 3, seed=2)
+        with pytest.warns(DeprecationWarning):
+            svc = CarbonService(trace=trace, forecast_noise=0.2, seed=7)
+        twin = dataclasses.replace(svc, horizon=48)      # must not raise
+        assert twin.horizon == 48
+        assert twin.model == svc.model
+        np.testing.assert_array_equal(twin.forecast(3, 24),
+                                      svc.forecast(3, 24))
+
+
+# --- quantile view + robust policies -----------------------------------------
+
+
+class TestQuantileView:
+    def test_view_collapses_onto_truth_under_perfect_forecast(self):
+        svc = CarbonService.synthetic("germany", HOURS, seed=5)
+        view = QuantileCIView(svc, 0.7)
+        for t in (0, 10, 50):
+            np.testing.assert_array_equal(view.forecast(t), svc.forecast(t))
+            assert view.rank(t) == svc.rank(t)
+            assert view.percentile_threshold(t, 30.0) == \
+                svc.percentile_threshold(t, 30.0)
+            assert view.ci(t) == svc.ci(t)
+            assert view.gradient(t) == svc.gradient(t)
+        np.testing.assert_array_equal(view.forecast_extended(3, 60),
+                                      svc.forecast_extended(3, 60))
+        assert len(view) == len(svc)
+
+    def test_view_orders_with_quantile_under_ensemble(self):
+        svc = CarbonService.synthetic(
+            "germany", HOURS, seed=5,
+            model=QuantileForecast(sigma=0.3, seed=1))
+        lo = QuantileCIView(svc, 0.2).forecast(10)
+        hi = QuantileCIView(svc, 0.8).forecast(10)
+        assert (lo <= hi + 1e-9).all()
+        assert (lo < hi).any()
+
+    def test_robust_wait_awhile_identical_under_perfect_forecast(self):
+        from repro.core import ClusterConfig, simulate
+        from repro.traces import TraceSpec, generate_trace
+
+        cluster = ClusterConfig.default(capacity=10)
+        ci = CarbonService.synthetic("south-australia", 24 * 40, seed=3)
+        jobs = generate_trace(TraceSpec(family="azure", hours=24 * 7,
+                                        capacity=10, seed=4),
+                              cluster.queues)
+        a = simulate(jobs, ci, cluster, WaitAwhilePolicy(), horizon=24 * 7)
+        b = simulate(jobs, ci, cluster, RobustWaitAwhilePolicy(),
+                     horizon=24 * 7)
+        assert a.carbon_g == b.carbon_g
+        np.testing.assert_array_equal(a.completion, b.completion)
+
+
+# --- serialization + labels --------------------------------------------------
+
+
+class TestSerialization:
+    @pytest.mark.parametrize("kind", sorted(MODELS))
+    def test_model_round_trip(self, kind):
+        m = MODELS[kind]
+        d = forecast_to_dict(m)
+        assert d["kind"] == kind
+        assert forecast_from_dict(json.loads(json.dumps(d))) == m
+
+    def test_none_round_trips(self):
+        assert forecast_to_dict(None) is None
+        assert forecast_from_dict(None) is None
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="unknown forecast kind"):
+            forecast_from_dict({"kind": "astrology"})
+        assert set(FORECAST_KINDS) == set(MODELS)
+
+    def test_labels(self):
+        assert forecast_label(None) == "perfect"
+        assert forecast_label(PerfectForecast()) == "perfect"
+        assert forecast_label(NoisyForecast(sigma=0.25)) == "noisy(s=0.25)"
+        assert forecast_label(QuantileForecast(sigma=0.1, members=9)) \
+            == "quantile(s=0.1,m=9)"
+
+    def test_axis_labels_disambiguate_colliding_models(self):
+        """Two distinct models sharing a display label (same sigma,
+        different seed/phi) must get distinct axis labels, or their
+        savings cells would silently merge; equal models keep equal
+        labels."""
+        from repro.core.forecast import forecast_labels
+
+        axis = (None, NoisyForecast(sigma=0.2, seed=1),
+                NoisyForecast(sigma=0.2, seed=2),
+                NoisyForecast(sigma=0.2, seed=1),      # equal to entry 1
+                NoisyForecast(sigma=0.2, seed=1, phi=0.5))
+        assert forecast_labels(axis) == [
+            "perfect", "noisy(s=0.2)", "noisy(s=0.2)#2", "noisy(s=0.2)",
+            "noisy(s=0.2)#3"]
+
+    def test_scenario_round_trip_with_forecast(self):
+        sc = Scenario(capacity=8, learn_weeks=1,
+                      forecast=NoisyForecast(sigma=0.2, seed=5))
+        rt = Scenario.from_dict(json.loads(json.dumps(sc.to_dict())))
+        assert rt == sc
+        assert rt.forecast == NoisyForecast(sigma=0.2, seed=5)
+
+    def test_scenario_default_round_trip_unchanged(self):
+        sc = Scenario(capacity=8, learn_weeks=1)
+        d = sc.to_dict()
+        assert d["forecast"] is None
+        assert Scenario.from_dict(json.loads(json.dumps(d))) == sc
+
+
+# --- Scenario / Sweep threading ----------------------------------------------
+
+
+class TestExperimentThreading:
+    def test_materialize_threads_model_single_region(self):
+        m = NoisyForecast(sigma=0.2, seed=1)
+        mat = Scenario(capacity=8, learn_weeks=1, forecast=m).materialize()
+        assert mat.ci.model is m
+
+    def test_materialize_threads_model_geo(self):
+        m = NoisyForecast(sigma=0.2, seed=1)
+        mat = Scenario(regions=("california", "ontario"), capacity=8,
+                       learn_weeks=1, forecast=m).materialize()
+        assert all(s.model is m for s in mat.mci.services)
+        # shared model, but per-region error streams stay independent
+        t = mat.t0
+        fm = mat.mci.forecast_matrix(t, 24)
+        r0 = fm[0] / np.clip(mat.mci.services[0].trace[t:t + 24], 1e-9, None)
+        r1 = fm[1] / np.clip(mat.mci.services[1].trace[t:t + 24], 1e-9, None)
+        assert not np.array_equal(r0[1:], r1[1:])
+
+    def test_sweep_without_axis_has_no_forecast_column(self):
+        sw = Sweep(base=Scenario(capacity=8, learn_weeks=1,
+                                 family="alibaba", seed=101),
+                   policies=["carbon-agnostic", "wait-awhile"])
+        rows = sw.run().rows()
+        assert all("forecast" not in r for r in rows)
+
+    def test_sweep_forecast_axis_rows_and_savings_grouping(self):
+        sw = Sweep(base=Scenario(capacity=8, learn_weeks=1,
+                                 family="alibaba", seed=101),
+                   policies=["carbon-agnostic", "wait-awhile",
+                             "wait-awhile-robust"],
+                   forecasts=[None, NoisyForecast(sigma=0.3, seed=2)])
+        sr = sw.run()
+        rows = sr.rows()
+        assert {r["forecast"] for r in rows} == {"perfect", "noisy(s=0.3)"}
+        # savings compare within the same forecast cell: every baseline
+        # row is its own cell's zero
+        for r in rows:
+            if r["policy"] == "carbon-agnostic":
+                assert r["savings_pct"] == 0.0
+        # perfect-forecast cells: robust == plain, bit for bit
+        for fc in ("perfect",):
+            plain = [r for r in rows if r["forecast"] == fc
+                     and r["policy"] == "wait-awhile"]
+            robust = [r for r in rows if r["forecast"] == fc
+                      and r["policy"] == "wait-awhile-robust"]
+            assert [r["carbon_g"] for r in plain] \
+                == [r["carbon_g"] for r in robust]
+        payload = sr.to_json()
+        from repro.experiment import SweepResult
+        assert SweepResult.from_json(payload).to_json() == payload
+
+    def test_sweep_colliding_forecast_models_get_own_cells(self):
+        """Regression: two NoisyForecasts of equal sigma but different
+        seed (a forecast-realization average, a natural grid) must land
+        in separate savings cells — each with its own zero baseline."""
+        sw = Sweep(base=Scenario(capacity=8, learn_weeks=1,
+                                 family="alibaba", seed=101),
+                   policies=["carbon-agnostic", "wait-awhile"],
+                   forecasts=[NoisyForecast(sigma=0.3, seed=1),
+                              NoisyForecast(sigma=0.3, seed=2)])
+        rows = sw.run().rows()
+        labels = {r["forecast"] for r in rows}
+        assert labels == {"noisy(s=0.3)", "noisy(s=0.3)#2"}
+        for fc in labels:
+            cell = [r for r in rows if r["forecast"] == fc]
+            assert len(cell) == 2
+            base = [r for r in cell if r["policy"] == "carbon-agnostic"]
+            assert base[0]["savings_pct"] == 0.0
+        # the two realizations genuinely differ
+        wa = {r["forecast"]: r["carbon_g"] for r in rows
+              if r["policy"] == "wait-awhile"}
+        assert wa["noisy(s=0.3)"] != wa["noisy(s=0.3)#2"]
+
+    def test_oracle_gap_harness_tiny(self):
+        from repro.experiment import OracleGap, OracleGapResult, sigma_ladder
+
+        gap = OracleGap(base=Scenario(capacity=8, learn_weeks=1,
+                                      family="alibaba", seed=101),
+                        policies=("wait-awhile", "wait-awhile-robust"),
+                        seeds=(11,),
+                        forecasts=sigma_ladder((0.0, 0.3)))
+        res = gap.run()
+        s = res.summary()
+        assert list(s) == ["perfect", "noisy(s=0.3)"]
+        # robust == plain under the perfect forecast, gap 0 for nobody
+        assert s["perfect"]["wait-awhile"]["gap_mean_pp"] \
+            == s["perfect"]["wait-awhile-robust"]["gap_mean_pp"]
+        assert res.perfect_gap("wait-awhile") == \
+            s["perfect"]["wait-awhile"]["gap_mean_pp"]
+        curve = res.degradation_curve("wait-awhile")
+        assert [fc for fc, _ in curve] == ["perfect", "noisy(s=0.3)"]
+        rt = OracleGapResult.from_json(res.to_json())
+        assert rt.to_json() == res.to_json()
+
+    @pytest.mark.slow
+    def test_oracle_gap_degradation_curve_moderate_scale(self):
+        """Slow forecast sweep (registered under the `slow` marker so
+        tier-1 stays fast): at capacity 24 x 3 seeds x a 4-point sigma
+        ladder, (a) a forecast-blind policy's gap is forecast-invariant,
+        (b) robust == plain under the perfect forecast, (c) wait-awhile
+        loses savings at every noisy point, and (d) the quantile-robust
+        variant recovers part of that loss at every noisy point."""
+        from repro.experiment import OracleGap, sigma_ladder
+
+        res = OracleGap(base=Scenario(capacity=24, learn_weeks=2, seed=7),
+                        seeds=(1, 2, 3),
+                        forecasts=sigma_ladder((0.0, 0.1, 0.2, 0.4))).run()
+        curves = {p: dict(res.degradation_curve(p)) for p in res.policies()}
+        noisy_pts = [fc for fc in res.forecast_order if fc != "perfect"]
+        assert len(noisy_pts) == 3
+        # (a) carbon-agnostic never reads a forecast
+        agn = curves["carbon-agnostic"]
+        assert all(agn[fc] == agn["perfect"] for fc in noisy_pts)
+        # (b) perfect forecast: quantile bands collapse onto the truth
+        for plain, robust in [("wait-awhile", "wait-awhile-robust"),
+                              ("carbonflex", "carbonflex-robust")]:
+            assert curves[plain]["perfect"] == curves[robust]["perfect"]
+        # (c) + (d)
+        for fc in noisy_pts:
+            assert curves["wait-awhile"][fc] > curves["wait-awhile"]["perfect"]
+            assert curves["wait-awhile-robust"][fc] \
+                < curves["wait-awhile"][fc]
+
+    def test_sigma_ladder_shapes(self):
+        from repro.experiment import sigma_ladder
+
+        ladder = sigma_ladder((0.0, 0.1, 0.2), kind="quantile", members=5)
+        assert ladder[0] is None
+        assert all(isinstance(m, QuantileForecast) for m in ladder[1:])
+        assert [m.sigma for m in ladder[1:]] == [0.1, 0.2]
+        with pytest.raises(ValueError, match="kind"):
+            sigma_ladder(kind="tarot")

@@ -84,6 +84,32 @@ def test_geo_engines_identical_under_faults(world, policy_name, fault_seed):
     assert_geo_results_identical(rs, rv, f"{policy_name}+faults")
 
 
+@pytest.mark.parametrize("policy_name", sorted(_MK))
+@pytest.mark.parametrize("forecast", ["noisy", "quantile"])
+@pytest.mark.parametrize("faulty", [False, True])
+def test_geo_engines_identical_under_noisy_forecasts(world, policy_name,
+                                                     forecast, faulty):
+    """ISSUE-5 satellite: the multi-region engines consume per-region
+    forecast error streams identically — bit-for-bit parity holds under
+    NoisyForecast / QuantileForecast, with and without faults."""
+    from repro.core import NoisyForecast, QuantileForecast
+
+    geo, mci, jobs = world
+    model = (NoisyForecast(sigma=0.3, seed=5) if forecast == "noisy"
+             else QuantileForecast(sigma=0.3, seed=5, members=5))
+    mci_f = MultiRegionCarbonService(
+        mci.regions,
+        tuple(dataclasses.replace(s, model=model) for s in mci.services))
+    mk = _MK[policy_name]
+    mk_faults = (lambda: FaultModel(straggler_rate=0.15, failure_rate=0.05,
+                                    seed=3)) if faulty else (lambda: None)
+    rs = simulate(jobs, mci_f, geo, mk(), horizon=WEEK, engine="scalar",
+                  faults=mk_faults())
+    rv = simulate(jobs, mci_f, geo, mk(), horizon=WEEK, engine="vector",
+                  faults=mk_faults())
+    assert_geo_results_identical(rs, rv, f"{policy_name}+{forecast}")
+
+
 def test_simulate_many_dispatches_geo_cases(world):
     geo, mci, jobs = world
     cases = [SimCase(jobs=jobs, ci=mci, cluster=geo, policy=_MK[n](),

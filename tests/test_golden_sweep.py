@@ -9,15 +9,20 @@ intended) with:
 
     PYTHONPATH=src python tests/test_golden_sweep.py --regen
 """
+import dataclasses
 import json
 import os
 
+from repro.core.forecast import (NoisyForecast, PerfectForecast,
+                                 QuantileForecast)
 from repro.experiment import Scenario, Sweep
 from repro.traces import DagConfig
 
 FIXTURE = os.path.join(os.path.dirname(__file__), "data", "golden_sweep.json")
 FIXTURE_DAG = os.path.join(os.path.dirname(__file__), "data",
                            "golden_sweep_dag.json")
+FIXTURE_FORECAST = os.path.join(os.path.dirname(__file__), "data",
+                                "golden_sweep_forecast.json")
 
 
 def golden_sweep() -> Sweep:
@@ -39,6 +44,18 @@ def golden_dag_sweep() -> Sweep:
                       learn_weeks=1, family="alibaba", seed=101),
         seeds=[11, 12],
         policies=["dag-fcfs", "dag-carbon", "dag-cap"])
+
+
+def golden_forecast_sweep() -> Sweep:
+    """A small forecast-axis grid (ISSUE-5 satellite): perfect + noisy +
+    quantile-ensemble forecasts x (plain + robust) threshold policies —
+    pins the forecast subsystem's realized error streams end-to-end."""
+    return Sweep(
+        base=Scenario(capacity=8, learn_weeks=1, family="alibaba", seed=101),
+        seeds=[11],
+        policies=["carbon-agnostic", "wait-awhile", "wait-awhile-robust"],
+        forecasts=[None, NoisyForecast(sigma=0.3, seed=5),
+                   QuantileForecast(sigma=0.2, seed=5, members=7)])
 
 
 def test_golden_sweep_reproduces_fixture_exactly():
@@ -79,6 +96,56 @@ def test_dag_fixture_shape_sanity():
     assert all(r["savings_pct"] > 0 for r in carbon)
 
 
+def test_explicit_perfect_forecast_matches_default_golden_rows():
+    """Backward compat (ISSUE-5): running the golden grid with
+    ``forecast=PerfectForecast()`` set *explicitly* reproduces the
+    checked-in rows bit-for-bit (modulo the forecast label column the
+    axis adds)."""
+    with open(FIXTURE) as f:
+        want = json.load(f)
+    sw = golden_sweep()
+    sw = dataclasses.replace(
+        sw, base=dataclasses.replace(sw.base, forecast=PerfectForecast()))
+    got = json.loads(sw.run().to_json())
+    assert len(got["rows"]) == len(want["rows"])
+    for g, w in zip(got["rows"], want["rows"]):
+        assert g.pop("forecast") == "perfect"
+        assert g == w, f"row drifted: {(w['region'], w['seed'], w['policy'])}"
+    assert got["summary"] == want["summary"]
+
+
+def test_golden_forecast_sweep_reproduces_fixture_exactly():
+    with open(FIXTURE_FORECAST) as f:
+        want = json.load(f)
+    got = json.loads(golden_forecast_sweep().run().to_json())
+    assert got["baseline"] == want["baseline"] == "carbon-agnostic"
+    assert len(got["rows"]) == len(want["rows"]) == 9
+    for g, w in zip(got["rows"], want["rows"]):
+        key = (w["forecast"], w["policy"])
+        assert g == w, f"row drifted: {key}"
+    assert got["summary"] == want["summary"]
+    assert got == want
+
+
+def test_forecast_fixture_shape_sanity():
+    with open(FIXTURE_FORECAST) as f:
+        want = json.load(f)
+    rows = want["rows"]
+    assert {r["forecast"] for r in rows} == {"perfect", "noisy(s=0.3)",
+                                             "quantile(s=0.2,m=7)"}
+    assert {r["policy"] for r in rows} == {"carbon-agnostic", "wait-awhile",
+                                           "wait-awhile-robust"}
+    assert all(r["carbon_g"] > 0 for r in rows)
+    # under the perfect forecast the robust variant is bit-identical
+    perfect = {r["policy"]: r["carbon_g"] for r in rows
+               if r["forecast"] == "perfect"}
+    assert perfect["wait-awhile"] == perfect["wait-awhile-robust"]
+    # under noise they diverge (the realized error streams differ)
+    noisy = {r["policy"]: r["carbon_g"] for r in rows
+             if r["forecast"] == "noisy(s=0.3)"}
+    assert noisy["wait-awhile"] != noisy["wait-awhile-robust"]
+
+
 def test_fixture_shape_sanity():
     with open(FIXTURE) as f:
         want = json.load(f)
@@ -103,7 +170,8 @@ if __name__ == "__main__":
     if ap.parse_args().regen:
         os.makedirs(os.path.dirname(FIXTURE), exist_ok=True)
         for path, sweep in ((FIXTURE, golden_sweep()),
-                            (FIXTURE_DAG, golden_dag_sweep())):
+                            (FIXTURE_DAG, golden_dag_sweep()),
+                            (FIXTURE_FORECAST, golden_forecast_sweep())):
             payload = sweep.run().to_json()
             with open(path, "w") as f:
                 f.write(payload)

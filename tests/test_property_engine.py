@@ -19,7 +19,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import (CarbonService, ClusterConfig, GeoCluster,
                         GeoFlexPolicy, GeoGreedyPolicy, GeoStaticPolicy,
-                        MultiRegionCarbonService, baselines, simulate)
+                        MultiRegionCarbonService, NoisyForecast,
+                        QuantileForecast, baselines, simulate)
 from repro.core.carbon import REGIONS, synthesize_trace
 from repro.core.profiles import (RooflineTerms, amdahl_profile,
                                  roofline_profile)
@@ -30,19 +31,29 @@ POLICIES = {
     "carbon-agnostic": baselines.CarbonAgnosticPolicy,
     "gaia": lambda: baselines.GaiaPolicy(mean_length=3.0),
     "wait-awhile": baselines.WaitAwhilePolicy,
+    "wait-awhile-robust": baselines.RobustWaitAwhilePolicy,
     "carbonscaler": lambda: baselines.CarbonScalerPolicy(mean_length=3.0),
     "vcc-scaling": lambda: baselines.VCCPolicy(scaling=True),
 }
 GEO_POLICIES = {"geo-static": GeoStaticPolicy, "geo-greedy": GeoGreedyPolicy,
                 "geo-flex": GeoFlexPolicy}
 
+#: forecast-model axis for the parity sweeps (None = perfect)
+FORECASTS = {
+    "perfect": lambda seed: None,
+    "noisy": lambda seed: NoisyForecast(sigma=0.3, seed=seed),
+    "quantile": lambda seed: QuantileForecast(sigma=0.3, seed=seed,
+                                              members=5),
+}
 
-def _random_world(seed: int):
+
+def _random_world(seed: int, forecast: str = "perfect"):
     """A seeded random (cluster, ci, jobs) world: mixed elasticities,
     heterogeneous power/comm, random arrivals in a 72-slot window."""
     rng = np.random.default_rng(seed)
     cluster = ClusterConfig.default(capacity=int(rng.integers(4, 12)))
-    ci = CarbonService(trace=rng.uniform(30.0, 700.0, 24 * 40))
+    ci = CarbonService(trace=rng.uniform(30.0, 700.0, 24 * 40),
+                       model=FORECASTS[forecast](seed % 1009))
     jobs = []
     for i in range(int(rng.integers(3, 22))):
         k_min = int(rng.integers(1, 3))
@@ -68,8 +79,9 @@ def _assert_identical(a, b, ctx):
         and all(x == y for x, y in zip(a.slots, b.slots)), ctx
 
 
-def _check_parity(seed: int, policy_name: str, fault_seed: int | None):
-    cluster, ci, jobs = _random_world(seed)
+def _check_parity(seed: int, policy_name: str, fault_seed: int | None,
+                  forecast: str = "perfect"):
+    cluster, ci, jobs = _random_world(seed, forecast)
     mk = POLICIES[policy_name]
     mk_faults = (lambda: None) if fault_seed is None else \
         (lambda: FaultModel(straggler_rate=0.15, failure_rate=0.05,
@@ -78,18 +90,22 @@ def _check_parity(seed: int, policy_name: str, fault_seed: int | None):
                   faults=mk_faults())
     rv = simulate(jobs, ci, cluster, mk(), horizon=96, engine="vector",
                   faults=mk_faults())
-    _assert_identical(rs, rv, f"seed={seed} policy={policy_name}")
+    _assert_identical(rs, rv,
+                      f"seed={seed} policy={policy_name} fc={forecast}")
 
 
-def _check_geo_parity(seed: int, policy_name: str, fault_seed: int | None):
+def _check_geo_parity(seed: int, policy_name: str, fault_seed: int | None,
+                      forecast: str = "perfect"):
     cluster, ci, jobs = _random_world(seed)
     rng = np.random.default_rng(seed + 1)
     regions = tuple(rng.choice(sorted(REGIONS), size=int(rng.integers(2, 4)),
                                replace=False))
     geo = GeoCluster.split(cluster.capacity + 2, regions)
+    model = FORECASTS[forecast](seed % 1009)
     mci = MultiRegionCarbonService(
         regions, tuple(CarbonService(trace=synthesize_trace(r, 24 * 40,
-                                                            seed=seed))
+                                                            seed=seed),
+                                     model=model)
                        for r in regions))
     mk = GEO_POLICIES[policy_name]
     mk_faults = (lambda: None) if fault_seed is None else \
@@ -99,7 +115,8 @@ def _check_geo_parity(seed: int, policy_name: str, fault_seed: int | None):
                   faults=mk_faults())
     rv = simulate(jobs, mci, geo, mk(), horizon=96, engine="vector",
                   faults=mk_faults())
-    _assert_identical(rs, rv, f"geo seed={seed} policy={policy_name}")
+    _assert_identical(rs, rv,
+                      f"geo seed={seed} policy={policy_name} fc={forecast}")
     np.testing.assert_array_equal(rs.final_region, rv.final_region)
     assert rs.migrations == rv.migrations
     assert rs.migration_carbon_g == rv.migration_carbon_g
@@ -144,17 +161,20 @@ def _check_roofline(flops: float, hbm: float, grad: float, k_max: int):
 
 
 @given(seed=st.integers(0, 10**6), policy=st.sampled_from(sorted(POLICIES)),
-       faulty=st.booleans())
+       faulty=st.booleans(), forecast=st.sampled_from(sorted(FORECASTS)))
 @settings(max_examples=20, deadline=None)
-def test_engine_parity_random_worlds(seed, policy, faulty):
-    _check_parity(seed, policy, fault_seed=seed % 97 if faulty else None)
+def test_engine_parity_random_worlds(seed, policy, faulty, forecast):
+    _check_parity(seed, policy, fault_seed=seed % 97 if faulty else None,
+                  forecast=forecast)
 
 
 @given(seed=st.integers(0, 10**6),
-       policy=st.sampled_from(sorted(GEO_POLICIES)), faulty=st.booleans())
+       policy=st.sampled_from(sorted(GEO_POLICIES)), faulty=st.booleans(),
+       forecast=st.sampled_from(sorted(FORECASTS)))
 @settings(max_examples=15, deadline=None)
-def test_geo_engine_parity_random_worlds(seed, policy, faulty):
-    _check_geo_parity(seed, policy, fault_seed=seed % 89 if faulty else None)
+def test_geo_engine_parity_random_worlds(seed, policy, faulty, forecast):
+    _check_geo_parity(seed, policy, fault_seed=seed % 89 if faulty else None,
+                      forecast=forecast)
 
 
 @given(seed=st.integers(0, 10**6), policy=st.sampled_from(sorted(POLICIES)))
@@ -189,11 +209,28 @@ def test_engine_parity_smoke(seed, policy):
     _check_parity(seed + 1, policy, fault_seed=seed + 2)
 
 
+@pytest.mark.parametrize("seed", [0, 7])
+@pytest.mark.parametrize("policy", sorted(POLICIES))
+@pytest.mark.parametrize("forecast", ["noisy", "quantile"])
+def test_engine_parity_forecast_smoke(seed, policy, forecast):
+    _check_parity(seed, policy, fault_seed=None, forecast=forecast)
+    _check_parity(seed + 1, policy, fault_seed=seed + 2, forecast=forecast)
+
+
 @pytest.mark.parametrize("seed", [0, 7, 1234])
 @pytest.mark.parametrize("policy", sorted(GEO_POLICIES))
 def test_geo_engine_parity_smoke(seed, policy):
     _check_geo_parity(seed, policy, fault_seed=None)
     _check_geo_parity(seed + 1, policy, fault_seed=seed + 2)
+
+
+@pytest.mark.parametrize("seed", [0, 7])
+@pytest.mark.parametrize("policy", sorted(GEO_POLICIES))
+@pytest.mark.parametrize("forecast", ["noisy", "quantile"])
+def test_geo_engine_parity_forecast_smoke(seed, policy, forecast):
+    _check_geo_parity(seed, policy, fault_seed=None, forecast=forecast)
+    _check_geo_parity(seed + 1, policy, fault_seed=seed + 2,
+                      forecast=forecast)
 
 
 @pytest.mark.parametrize("seed", [3, 99])
