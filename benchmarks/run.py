@@ -44,6 +44,15 @@ def main() -> None:
                 if not k.startswith("_"):
                     print(f"{name}/{k},{float(v) * 1e6:.0f},seconds={v}")
             continue
+        if name == "resilience":
+            for section in ("degradation", "stale_feed"):
+                for regime, pols in res[section].items():
+                    for pol, s in pols.items():
+                        print(f"{name}/{section}/{regime}/{pol},0,"
+                              f"savings={s['savings_mean_pct']}%"
+                              f";viol={s['violation_rate']}"
+                              f";lost={s.get('lost_work_slots', 0)}")
+            continue
         if name == "forecast_gap":
             for fc, pols in res["summary"].items():
                 for pol, s in pols.items():

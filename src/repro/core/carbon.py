@@ -21,6 +21,8 @@ import warnings
 
 import numpy as np
 
+from .faults import (CarbonDataOutage, DegradedCIView,  # noqa: F401
+                     DegradedMultiRegionView)
 from .forecast import (ForecastFeatureMixin, ForecastModel,  # noqa: F401
                        PerfectForecast, StaticNoiseForecast)
 
@@ -96,6 +98,10 @@ class CarbonService(ForecastFeatureMixin):
     horizon: int = 24
     seed: int = 0
     model: ForecastModel | None = None
+    # Feed-outage injection (core/faults.py): stale/gap windows the policy
+    # stack sees through ``degraded()``.  None = the feed is always fresh
+    # and ``degraded()`` returns the service itself, bit-identical.
+    outage: CarbonDataOutage | None = None
 
     def __post_init__(self) -> None:
         if self.forecast_noise > 0:
@@ -128,6 +134,19 @@ class CarbonService(ForecastFeatureMixin):
 
     def ci(self, t: int) -> float:
         return float(self.trace[min(t, len(self.trace) - 1)])
+
+    def degraded(self) -> "CarbonService | DegradedCIView":
+        """The view the *policy stack* reads: the service itself when the
+        feed has no outages, else a cached :class:`DegradedCIView`
+        (forward-filled observations, staged forecast fallback).  The
+        engines keep reading the true service for carbon accounting."""
+        if self.outage is None:
+            return self
+        cached = self.__dict__.get("_degraded")
+        if cached is None:
+            cached = DegradedCIView(self, self.outage)
+            self._degraded = cached
+        return cached
 
     def forecast(self, t: int, horizon: int | None = None) -> np.ndarray:
         """Day-ahead forecast starting at slot t (paper footnote 3),
@@ -218,6 +237,18 @@ class MultiRegionCarbonService:
         """Single-region CI accessor (defaults to region 0 so existing
         single-region code paths can read a geo service unambiguously)."""
         return self.service(region).ci(t)
+
+    def degraded(self) -> "MultiRegionCarbonService | DegradedMultiRegionView":
+        """Multi-region analogue of :meth:`CarbonService.degraded`: the
+        service itself when every regional feed is outage-free, else a
+        cached view stitching the per-region degraded views."""
+        if all(s.outage is None for s in self.services):
+            return self
+        cached = self.__dict__.get("_degraded")
+        if cached is None:
+            cached = DegradedMultiRegionView(self)
+            self._degraded = cached
+        return cached
 
     def ci_vec(self, t: int) -> np.ndarray:
         return np.array([s.ci(t) for s in self.services])

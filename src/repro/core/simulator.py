@@ -46,54 +46,43 @@ import numpy as np
 
 from . import emissions
 from .carbon import CarbonService, MultiRegionCarbonService
+from .faults import (FaultModel, FaultProcess,  # noqa: F401  (re-export)
+                     ensure_fault_process)
 from .policy import Policy
 from .scheduling import ActiveJob, EntryBlocks, apply_slot
-from .types import ClusterConfig, GeoCluster, Job, SimResult, SlotLog
+from .types import (ClusterConfig, GeoCluster, Job, ResilienceMetrics,
+                    SimResult, SlotLog)
 
 _EPS = 1e-9
 
+# ``FaultModel`` moved to ``core/faults.py`` (it aliases ``IidFaults``
+# there); the import above keeps ``repro.core.simulator.FaultModel``
+# working for existing call sites.
 
-@dataclasses.dataclass
-class FaultModel:
-    """Cluster-level fault/straggler injection (DESIGN.md §10).
 
-    Each slot, every job independently suffers a *straggler* event with
-    probability ``straggler_rate`` (progress that slot scaled by
-    ``straggler_slowdown`` — a slow host in the allocation), or a *failure*
-    with probability ``failure_rate`` (the slot's progress is lost entirely:
-    the job restarts the slot from its last checkpoint).  Seeded and
-    deterministic.  CarbonFlex's Algorithm-2 violation feedback is the
-    compensating control loop — see tests/test_faults.py."""
+def _policy_ci_view(ci):
+    """The CI view the *policy* reads: the service's ``degraded()`` view
+    when the feed has outage injection (``core/faults.py``), else the
+    service itself.  Accounting always reads the true service."""
+    deg = getattr(ci, "degraded", None)
+    return deg() if deg is not None else ci
 
-    straggler_rate: float = 0.0
-    straggler_slowdown: float = 0.5
-    failure_rate: float = 0.0
-    seed: int = 0
 
-    def __post_init__(self) -> None:
-        self._rng = np.random.default_rng(self.seed)
+def _count_degraded(ci_pol, t0: int, t_end: int) -> int:
+    return sum(1 for t in range(t0, t_end) if ci_pol.staleness(t) > 0)
 
-    def progress_factor(self, t: int, job_id: int) -> float:
-        u = self._rng.random()
-        if u < self.failure_rate:
-            return 0.0
-        if u < self.failure_rate + self.straggler_rate:
-            return self.straggler_slowdown
-        return 1.0
 
-    def draw_factors(self, count: int) -> np.ndarray:
-        """Vectorised batch of ``count`` progress factors.
-
-        ``Generator.random(count)`` consumes exactly the same underlying
-        bit stream as ``count`` successive ``progress_factor`` calls, so
-        the vector engine's per-slot batch draw reproduces the scalar
-        engine's sequential draws bit-for-bit (asserted by the parity
-        tests)."""
-        u = self._rng.random(count)
-        return np.where(
-            u < self.failure_rate, 0.0,
-            np.where(u < self.failure_rate + self.straggler_rate,
-                     self.straggler_slowdown, 1.0))
+def _run_resilience(faults, ci_pol, ci, t0: int,
+                    t_end: int) -> ResilienceMetrics | None:
+    """Fold fault-process metrics and feed-degradation time into the
+    ``SimResult.resilience`` record (None when neither is in play)."""
+    resil = faults.run_metrics() if faults is not None else None
+    if ci_pol is not ci:
+        if resil is None:
+            resil = ResilienceMetrics()
+        resil = dataclasses.replace(
+            resil, degraded_slots=_count_degraded(ci_pol, t0, t_end))
+    return resil
 
 
 # --- packed job tables ------------------------------------------------------
@@ -288,7 +277,7 @@ def simulate(
     t0: int = 0,
     horizon: int | None = None,
     max_overrun: int = 24 * 21,
-    faults: FaultModel | None = None,
+    faults: FaultProcess | None = None,
     engine: str = "vector",
 ) -> SimResult:
     if engine not in ("vector", "scalar"):
@@ -316,13 +305,17 @@ def _simulate_vector(
     t0: int = 0,
     horizon: int | None = None,
     max_overrun: int = 24 * 21,
-    faults: FaultModel | None = None,
+    faults: FaultProcess | None = None,
     packed: PackedJobs | None = None,
 ) -> SimResult:
     horizon = int(horizon if horizon is not None else len(ci) - t0)
     if packed is None:
         packed = _packed_for(jobs)
-    policy.on_window_start(ci, t0, horizon, packed.jobs, cluster)
+    ci_pol = _policy_ci_view(ci)        # policies read the (maybe degraded)
+    faults = ensure_fault_process(faults)  # view; accounting the true feed
+    if faults is not None:
+        faults.on_run_start(t0, cluster.capacity)
+    policy.on_window_start(ci_pol, t0, horizon, packed.jobs, cluster)
     decide_packed = getattr(policy, "decide_packed", None)
 
     eng = EngineState(packed)
@@ -371,9 +364,15 @@ def _simulate_vector(
                 and t >= t_end):
             break
 
+        if faults is not None:
+            faults.begin_slot(t)
+            cap_t = faults.available_capacity(cluster.capacity)
+        else:
+            cap_t = cluster.capacity
+
         if decide_packed is not None:
-            m_t, kvec = decide_packed(t, eng, ci, cluster)
-            m_t = int(min(m_t, cluster.capacity))
+            m_t, kvec = decide_packed(t, eng, ci_pol, cluster)
+            m_t = int(min(m_t, cap_t))
             # Defensive: the scalar engine unconditionally clips every
             # allocation into [k_min, k_max] and trims over-capacity
             # totals; route any non-compliant packed allocation through
@@ -388,8 +387,8 @@ def _simulate_vector(
             if bad:
                 kvec = _kvec_enforced(kvec, eng, m_t)
         else:
-            m_t, alloc = policy.decide(t, eng.active_views(), ci, cluster)
-            m_t = int(min(m_t, cluster.capacity))
+            m_t, alloc = policy.decide(t, eng.active_views(), ci_pol, cluster)
+            m_t = int(min(m_t, cap_t))
             alloc = _enforce_capacity(alloc, eng.active_views(), m_t)
             kvec = np.zeros(n, dtype=np.int64)
             for jid, k in alloc.items():
@@ -413,6 +412,19 @@ def _simulate_vector(
         energy = 0.0
         for v in e_vec.tolist():               # sequential sum, scalar order
             energy += v
+        # fault disturbance over the allocated live jobs, row order (the
+        # same sequence the scalar engine builds — parity by construction);
+        # restore/transfer energy is billed into this slot, at this CI
+        prows = rows[(k_rows > 0) & live]
+        thr_p = thr_tab[prows, kvec[prows]]
+        dist = None
+        if faults is not None:
+            dist = faults.apply(t, [packed.jobs[r] for r in prows.tolist()],
+                                kvec[prows], eng.remaining[prows], thr_p)
+            if dist.extra_energy is not None:
+                for v in dist.extra_energy.tolist():
+                    if v:
+                        energy += v
         carbon = emissions.slot_carbon_g(energy, civ)
         total_energy += energy
         total_carbon += carbon
@@ -420,12 +432,12 @@ def _simulate_vector(
         # advance progress; degraded slots scale each allocated job's
         # progress (energy was already charged — a slow/failed host still
         # burns power); unallocated jobs spend waiting budget
-        prows = rows[(k_rows > 0) & live]
-        thr_p = thr_tab[prows, kvec[prows]]
-        if faults is None:
+        if dist is None:
             eng.remaining[prows] -= thr_p
         else:
-            eng.remaining[prows] -= thr_p * faults.draw_factors(len(prows))
+            eng.remaining[prows] -= thr_p * dist.factors
+            if dist.lost is not None:
+                eng.remaining[prows] += dist.lost
         eng.started[prows] = True
         wrows = rows[(k_rows == 0) & live]
         eng.slack_left[wrows] -= 1
@@ -464,6 +476,7 @@ def _simulate_vector(
         violations=violations,
         completion=completion,
         num_jobs=n,
+        resilience=_run_resilience(faults, ci_pol, ci, t0, t),
     )
 
 
@@ -495,7 +508,7 @@ class SimCase:
     t0: int = 0
     horizon: int | None = None
     max_overrun: int = 24 * 21
-    faults: FaultModel | None = None
+    faults: FaultProcess | None = None
     label: str = ""
 
 
@@ -534,11 +547,15 @@ def _simulate_scalar(
     t0: int = 0,
     horizon: int | None = None,
     max_overrun: int = 24 * 21,
-    faults: FaultModel | None = None,
+    faults: FaultProcess | None = None,
 ) -> SimResult:
     horizon = int(horizon if horizon is not None else len(ci) - t0)
     jobs = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
-    policy.on_window_start(ci, t0, horizon, jobs, cluster)
+    ci_pol = _policy_ci_view(ci)
+    faults = ensure_fault_process(faults)
+    if faults is not None:
+        faults.on_run_start(t0, cluster.capacity)
+    policy.on_window_start(ci_pol, t0, horizon, jobs, cluster)
 
     active: list[ActiveJob] = []
     n = len(jobs)
@@ -614,8 +631,14 @@ def _simulate_scalar(
         if not active and next_arrival == n and not blocked and t >= t_end:
             break
 
-        m_t, alloc = policy.decide(t, active, ci, cluster)
-        m_t = int(min(m_t, cluster.capacity))
+        if faults is not None:
+            faults.begin_slot(t)
+            cap_t = faults.available_capacity(cluster.capacity)
+        else:
+            cap_t = cluster.capacity
+
+        m_t, alloc = policy.decide(t, active, ci_pol, cluster)
+        m_t = int(min(m_t, cap_t))
         alloc = _enforce_capacity(alloc, active, m_t)
 
         civ = ci.ci(t)
@@ -627,26 +650,41 @@ def _simulate_scalar(
                 # actually needed is charged.
                 frac = min(1.0, a.remaining / max(a.job.throughput(k), 1e-9))
                 energy += emissions.slot_energy_kwh(a.job, k, cluster, frac)
+        # fault disturbance over the allocated live jobs in list order
+        # (= row order), through the same arrays the vector engine gathers
+        dist = None
+        run: list[ActiveJob] = []
+        if faults is not None:
+            run = [a for a in active
+                   if not a.done and alloc.get(a.job.job_id, 0) > 0]
+            ks = np.array([alloc[a.job.job_id] for a in run], dtype=np.int64)
+            rem = np.array([a.remaining for a in run], dtype=np.float64)
+            thr = np.array([a.job.throughput(int(k))
+                            for a, k in zip(run, ks)], dtype=np.float64)
+            dist = faults.apply(t, [a.job for a in run], ks, rem, thr)
+            if dist.extra_energy is not None:
+                for v in dist.extra_energy.tolist():
+                    if v:
+                        energy += v
         carbon = emissions.slot_carbon_g(energy, civ)
         total_energy += energy
         total_carbon += carbon
 
-        if faults is None:
+        if dist is None:
             apply_slot(active, alloc)
         else:
             # degraded slots: scale each allocated job's progress; energy
             # was already charged (a slow/failed host still burns power)
+            for i, a in enumerate(run):
+                a.remaining -= thr[i] * dist.factors[i]
+                if dist.lost is not None:
+                    a.remaining += dist.lost[i]
+                a.started = True
             for a in active:
-                if a.done:
+                if a.done or alloc.get(a.job.job_id, 0) > 0:
                     continue
-                k = alloc.get(a.job.job_id, 0)
-                if k > 0:
-                    f = faults.progress_factor(t, a.job.job_id)
-                    a.remaining -= a.job.throughput(k) * f
-                    a.started = True
-                else:
-                    a.slack_left -= 1
-                    a.waited += 1
+                a.slack_left -= 1
+                a.waited += 1
 
         finished = [a for a in active if a.done]
         for a in finished:
@@ -678,6 +716,7 @@ def _simulate_scalar(
         violations=violations,
         completion=completion,
         num_jobs=n,
+        resilience=_run_resilience(faults, ci_pol, ci, t0, t),
     )
 
 
@@ -867,7 +906,7 @@ def _simulate_geo_vector(
     t0: int = 0,
     horizon: int | None = None,
     max_overrun: int = 24 * 21,
-    faults: FaultModel | None = None,
+    faults: FaultProcess | None = None,
     packed: PackedJobs | None = None,
 ) -> SimResult:
     horizon = int(horizon if horizon is not None else len(mci) - t0)
@@ -876,7 +915,11 @@ def _simulate_geo_vector(
     if packed.has_deps:
         raise ValueError("the geo engines do not support DAG jobs yet; "
                          "run precedence-gated workloads single-region")
-    policy.on_window_start(mci, t0, horizon, packed.jobs, geo)
+    ci_pol = _policy_ci_view(mci)
+    faults = ensure_fault_process(faults)
+    if faults is not None:
+        faults.on_run_start(t0, geo.capacity_vec())
+    policy.on_window_start(ci_pol, t0, horizon, packed.jobs, geo)
 
     eng = GeoEngineState(packed, geo)
     n = packed.n
@@ -916,9 +959,15 @@ def _simulate_geo_vector(
         if not len(rows) and eng.admitted == n and t >= t_end:
             break
 
+        if faults is not None:
+            faults.begin_slot(t)
+            caps_t = faults.available_capacity_vec(caps)
+        else:
+            caps_t = caps
+
         active_views = eng.active_views()
-        m_vec, alloc = policy.decide_geo(t, active_views, mci, geo)
-        m_vec = np.minimum(np.asarray(m_vec, dtype=np.int64), caps)
+        m_vec, alloc = policy.decide_geo(t, active_views, ci_pol, geo)
+        m_vec = np.minimum(np.asarray(m_vec, dtype=np.int64), caps_t)
         per_r, migs = _resolve_geo(active_views, alloc, geo)
         kvec = np.zeros(n, dtype=np.int64)
         for r in range(n_regions):
@@ -944,6 +993,20 @@ def _simulate_geo_vector(
         for r in range(n_regions):
             for v in e_vec[a_regions == r].tolist():   # sequential, row order
                 energy_r[r] += v
+
+        prows = rows[(k_rows > 0) & live]
+        thr_p = thr_tab[prows, kvec[prows]]
+        dist = None
+        if faults is not None:
+            p_reg = eng.region[prows]
+            dist = faults.apply(t, [packed.jobs[r] for r in prows.tolist()],
+                                kvec[prows], eng.remaining[prows], thr_p,
+                                regions=p_reg)
+            if dist.extra_energy is not None:
+                for i, v in enumerate(dist.extra_energy.tolist()):
+                    if v:
+                        energy_r[int(p_reg[i])] += v
+
         mc = _charge_migrations(migs, geo, ci_vec, energy_r)
         mig_carbon_total += mc
         migrations += len(migs)
@@ -952,12 +1015,12 @@ def _simulate_geo_vector(
         total_energy += energy
         total_carbon += carbon
 
-        prows = rows[(k_rows > 0) & live]
-        thr_p = thr_tab[prows, kvec[prows]]
-        if faults is None:
+        if dist is None:
             eng.remaining[prows] -= thr_p
         else:
-            eng.remaining[prows] -= thr_p * faults.draw_factors(len(prows))
+            eng.remaining[prows] -= thr_p * dist.factors
+            if dist.lost is not None:
+                eng.remaining[prows] += dist.lost
         eng.started[prows] = True
         wrows = rows[(k_rows == 0) & live]
         eng.slack_left[wrows] -= 1
@@ -1000,6 +1063,7 @@ def _simulate_geo_vector(
         final_region=final_region,
         migrations=migrations,
         migration_carbon_g=mig_carbon_total,
+        resilience=_run_resilience(faults, ci_pol, mci, t0, t),
     )
 
 
@@ -1011,14 +1075,18 @@ def _simulate_geo_scalar(
     t0: int = 0,
     horizon: int | None = None,
     max_overrun: int = 24 * 21,
-    faults: FaultModel | None = None,
+    faults: FaultProcess | None = None,
 ) -> SimResult:
     horizon = int(horizon if horizon is not None else len(mci) - t0)
     if any(j.deps for j in jobs):
         raise ValueError("the geo engines do not support DAG jobs yet; "
                          "run precedence-gated workloads single-region")
     jobs = sorted(jobs, key=lambda j: (j.arrival, j.job_id))
-    policy.on_window_start(mci, t0, horizon, jobs, geo)
+    ci_pol = _policy_ci_view(mci)
+    faults = ensure_fault_process(faults)
+    if faults is not None:
+        faults.on_run_start(t0, geo.capacity_vec())
+    policy.on_window_start(ci_pol, t0, horizon, jobs, geo)
 
     n_regions = geo.n_regions
     caps = geo.capacity_vec()
@@ -1050,8 +1118,14 @@ def _simulate_geo_scalar(
         if not active and next_arrival == n and t >= t_end:
             break
 
-        m_vec, alloc = policy.decide_geo(t, active, mci, geo)
-        m_vec = np.minimum(np.asarray(m_vec, dtype=np.int64), caps)
+        if faults is not None:
+            faults.begin_slot(t)
+            caps_t = faults.available_capacity_vec(caps)
+        else:
+            caps_t = caps
+
+        m_vec, alloc = policy.decide_geo(t, active, ci_pol, geo)
+        m_vec = np.minimum(np.asarray(m_vec, dtype=np.int64), caps_t)
         per_r, migs = _resolve_geo(active, alloc, geo)
         final: dict[int, tuple[int, int]] = {}
         for r in range(n_regions):
@@ -1068,6 +1142,26 @@ def _simulate_geo_scalar(
             r, k = entry
             frac = min(1.0, a.remaining / max(a.job.throughput(k), 1e-9))
             energy_r[r] += emissions.slot_energy_kwh(a.job, k, geo, frac)
+
+        dist = None
+        run: list[GeoActiveJob] = []
+        if faults is not None:
+            run = [a for a in active
+                   if not a.done and final.get(a.job.job_id) is not None]
+            ks = np.array([final[a.job.job_id][1] for a in run],
+                          dtype=np.int64)
+            rem = np.array([a.remaining for a in run], dtype=np.float64)
+            thr = np.array([a.job.throughput(int(k))
+                            for a, k in zip(run, ks)], dtype=np.float64)
+            regs = np.array([final[a.job.job_id][0] for a in run],
+                            dtype=np.int64)
+            dist = faults.apply(t, [a.job for a in run], ks, rem, thr,
+                                regions=regs)
+            if dist.extra_energy is not None:
+                for i, v in enumerate(dist.extra_energy.tolist()):
+                    if v:
+                        energy_r[int(regs[i])] += v
+
         mc = _charge_migrations(migs, geo, ci_vec, energy_r)
         mig_carbon_total += mc
         migrations += len(migs)
@@ -1076,19 +1170,29 @@ def _simulate_geo_scalar(
         total_energy += energy
         total_carbon += carbon
 
-        for a in active:
-            if a.done:
-                continue
-            entry = final.get(a.job.job_id)
-            if entry is not None:
-                r, k = entry
-                if faults is None:
+        if dist is None:
+            for a in active:
+                if a.done:
+                    continue
+                entry = final.get(a.job.job_id)
+                if entry is not None:
+                    r, k = entry
                     a.remaining -= a.job.throughput(k)
+                    a.started = True
                 else:
-                    a.remaining -= (a.job.throughput(k)
-                                    * faults.progress_factor(t, a.job.job_id))
+                    a.slack_left -= 1
+                    a.waited += 1
+                    if a.mig_left > 0:
+                        a.mig_left -= 1
+        else:
+            for i, a in enumerate(run):
+                a.remaining -= thr[i] * dist.factors[i]
+                if dist.lost is not None:
+                    a.remaining += dist.lost[i]
                 a.started = True
-            else:
+            for a in active:
+                if a.done or final.get(a.job.job_id) is not None:
+                    continue
                 a.slack_left -= 1
                 a.waited += 1
                 if a.mig_left > 0:
@@ -1128,4 +1232,5 @@ def _simulate_geo_scalar(
         final_region=final_region,
         migrations=migrations,
         migration_carbon_g=mig_carbon_total,
+        resilience=_run_resilience(faults, ci_pol, mci, t0, t),
     )

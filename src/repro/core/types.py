@@ -252,6 +252,36 @@ class SlotLog:
     queued: int
 
 
+@dataclasses.dataclass(frozen=True)
+class ResilienceMetrics:
+    """Recovery accounting of one simulated window (``core/faults.py``).
+
+    ``lost_work_slots`` counts progress destroyed by faults (evicted /
+    failed slots plus checkpoint rollbacks), in base-scale work slots.
+    ``mttr_slots`` is the mean duration of *recovered* capacity outages;
+    ``degraded_slots`` the slots the policy stack ran on a stale carbon
+    feed (:class:`~repro.core.faults.DegradedCIView`)."""
+
+    evictions: int = 0
+    preemptions: int = 0
+    lost_work_slots: float = 0.0
+    restore_energy_kwh: float = 0.0
+    capacity_outages: int = 0
+    mttr_slots: float = 0.0
+    degraded_slots: int = 0
+
+    def to_dict(self) -> dict:
+        return {
+            "evictions": int(self.evictions),
+            "preemptions": int(self.preemptions),
+            "lost_work_slots": float(self.lost_work_slots),
+            "restore_energy_kwh": float(self.restore_energy_kwh),
+            "capacity_outages": int(self.capacity_outages),
+            "mttr_slots": float(self.mttr_slots),
+            "degraded_slots": int(self.degraded_slots),
+        }
+
+
 @dataclasses.dataclass
 class SimResult:
     """Aggregate result of one simulated window under one policy."""
@@ -273,6 +303,9 @@ class SimResult:
     final_region: np.ndarray | None = None   # per-job region at completion
     migrations: int = 0
     migration_carbon_g: float = 0.0
+    # Recovery metrics (core/faults.py); None on fault-free, fresh-feed
+    # runs so pre-resilience payloads (and golden fixtures) are unchanged.
+    resilience: ResilienceMetrics | None = None
 
     @property
     def mean_wait(self) -> float:
@@ -311,6 +344,8 @@ class SimResult:
                 self.region_energy_kwh, dtype=float).tolist()
             d["migrations"] = int(self.migrations)
             d["migration_carbon_g"] = float(self.migration_carbon_g)
+        if self.resilience is not None:
+            d["resilience"] = self.resilience.to_dict()
         if include_per_job:
             d["wait_slots"] = np.asarray(self.wait_slots, dtype=float).tolist()
             d["violations"] = np.asarray(self.violations, dtype=bool).tolist()

@@ -16,9 +16,11 @@ import dataclasses
 
 from repro.core.carbon import (REGIONS, CarbonService,
                                MultiRegionCarbonService)
+from repro.core.faults import (CarbonDataOutage, FaultProcess,
+                               fault_from_dict, fault_to_dict,
+                               outage_from_dict, outage_to_dict)
 from repro.core.forecast import (ForecastModel, forecast_from_dict,
                                  forecast_to_dict)
-from repro.core.simulator import FaultModel
 from repro.core.types import (ClusterConfig, GeoCluster, Job, MigrationModel,
                               QueueConfig, default_queues)
 from repro.traces import (DagConfig, TraceSpec, dag_mean_task_length,
@@ -119,7 +121,13 @@ class Scenario:
     rate_scale: float = 1.0
     delay_override: int | None = None   # uniform slack d (Fig. 9 / Fig. 14)
     eval_shift: float = 0.0             # Fig. 13 distribution shift
-    faults: FaultModel | None = None    # default fault injection for runs
+    # Fault process injected into every run of the scenario (core/faults.py):
+    # IidFaults (the historical FaultModel), CorrelatedFaults, or
+    # PreemptionFaults.
+    faults: FaultProcess | None = None
+    # Carbon-feed outage injection (core/faults.py): the policies' CI view
+    # goes stale/ffilled during outage windows while accounting stays true.
+    ci_outage: CarbonDataOutage | None = None
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "regions", tuple(self.regions))
@@ -193,7 +201,7 @@ class Scenario:
         if self.is_geo:
             mci = MultiRegionCarbonService.synthetic(
                 self.regions, self.hours + CI_MARGIN_HOURS, seed=self.seed,
-                model=self.forecast)
+                model=self.forecast, outage=self.ci_outage)
             geo = GeoCluster.split(self.capacity, self.regions,
                                    queues=self.queues(),
                                    migration=self.migration)
@@ -202,7 +210,8 @@ class Scenario:
             ci = CarbonService.synthetic(self.region,
                                          self.hours + CI_MARGIN_HOURS,
                                          seed=self.seed,
-                                         model=self.forecast)
+                                         model=self.forecast,
+                                         outage=self.ci_outage)
         spec = self.trace_spec()
 
         def _gen(s: TraceSpec) -> list[Job]:
@@ -235,10 +244,8 @@ class Scenario:
     def to_dict(self) -> dict:
         d = {f.name: getattr(self, f.name) for f in dataclasses.fields(self)}
         d["regions"] = list(self.regions)
-        if self.faults is not None:
-            d["faults"] = {k: getattr(self.faults, k) for k in
-                           ("straggler_rate", "straggler_slowdown",
-                            "failure_rate", "seed")}
+        d["faults"] = fault_to_dict(self.faults)
+        d["ci_outage"] = outage_to_dict(self.ci_outage)
         if self.migration is not None:
             d["migration"] = dataclasses.asdict(self.migration)
         if self.dag is not None:
@@ -252,7 +259,13 @@ class Scenario:
         d = dict(d)
         d["regions"] = tuple(d.get("regions", ()))
         if d.get("faults"):
-            d["faults"] = FaultModel(**d["faults"])
+            d["faults"] = fault_from_dict(d["faults"])
+        else:
+            d.pop("faults", None)
+        if d.get("ci_outage"):
+            d["ci_outage"] = outage_from_dict(d["ci_outage"])
+        else:
+            d.pop("ci_outage", None)
         if d.get("migration"):
             d["migration"] = MigrationModel(**d["migration"])
         if d.get("dag"):
@@ -260,3 +273,17 @@ class Scenario:
         if d.get("forecast"):
             d["forecast"] = forecast_from_dict(d["forecast"])
         return cls(**d)
+
+    def to_json(self, indent: int | None = None) -> str:
+        """JSON form of :meth:`to_dict` (round-trips every fault kind)."""
+        import json
+
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, payload: str) -> "Scenario":
+        """Inverse of :meth:`to_json`; unknown fault kinds raise a
+        ``ValueError`` naming the registered kinds."""
+        import json
+
+        return cls.from_dict(json.loads(payload))

@@ -21,19 +21,14 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from repro.core.faults import FaultProcess, fault_label  # noqa: F401  (re-export)
 from repro.core.forecast import ForecastModel, forecast_labels
-from repro.core.simulator import FaultModel, SimCase, simulate_many
+from repro.core.simulator import SimCase, simulate_many
 from repro.core.types import SimResult
 
 from .driver import DEFAULT_POLICIES, _fresh_faults, prepare_context
 from .registry import check_scenario_policies, make_policy
 from .scenario import WEEK, Scenario
-
-
-def fault_label(fm: FaultModel | None) -> str:
-    if fm is None:
-        return "none"
-    return f"straggler={fm.straggler_rate:g},failure={fm.failure_rate:g}"
 
 
 @dataclasses.dataclass
@@ -67,7 +62,7 @@ class Sweep:
     regions: Sequence[str] = ()
     seeds: Sequence[int] = ()
     policies: Sequence[str] = DEFAULT_POLICIES
-    faults: Sequence[FaultModel | None] | None = None
+    faults: Sequence[FaultProcess | None] | None = None
     # Forecast-model grid axis (ISSUE 5): each entry replaces the base
     # scenario's `forecast` (None = PerfectForecast), e.g. a
     # forecast-model x sigma grid `[None, NoisyForecast(sigma=0.1),
@@ -81,7 +76,7 @@ class Sweep:
     backend: str = "numpy"
     kb_kwargs: dict | None = None
 
-    def fault_axis(self) -> tuple[FaultModel | None, ...]:
+    def fault_axis(self) -> tuple[FaultProcess | None, ...]:
         if self.faults is None:
             return (self.base.faults,)
         return tuple(self.faults)

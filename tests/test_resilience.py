@@ -1,0 +1,528 @@
+"""Resilience layer (ISSUE-6): structured fault processes, feed outages.
+
+Families:
+
+- cross-engine bit parity for every ``FaultProcess`` kind, crossed with
+  plain / geo / DAG scenarios and with carbon-feed outage injection;
+- process semantics: correlated outages shrink capacity and evict (never
+  below zero), preemption rolls back to the last checkpoint and bills the
+  restore transfer, iid stays bit-for-bit the historical ``FaultModel``;
+- satellite 1: a fault instance reused across ``simulate`` calls re-seeds
+  per run, so repeated runs are reproducible;
+- ``CarbonDataOutage`` / ``DegradedCIView``: staleness, forward-fill,
+  staged forecast fallback, retry/backoff accessor;
+- serialization: ``Scenario.to_json``/``from_json`` round-trips every
+  fault kind + the outage config, legacy payloads resolve to iid, unknown
+  kinds raise naming the registry;
+- Sweep integration: fault axis labels + a slow-marked chaos grid.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (CarbonService, ClusterConfig, GeoCluster,
+                        MultiRegionCarbonService, baselines, simulate)
+from repro.core.dag import DagCarbonPolicy, DagFcfsPolicy
+from repro.core.faults import (CarbonDataOutage, CorrelatedFaults,
+                               DegradedCIView, FaultModel, IidFaults,
+                               PreemptionFaults, ensure_fault_process,
+                               fault_from_dict, fault_label, fault_to_dict,
+                               outage_from_dict, outage_to_dict)
+from repro.core.forecast import PersistenceForecast
+from repro.core.geo import GeoFlexPolicy, GeoStaticPolicy
+from repro.core.types import Job, ResilienceMetrics
+from repro.experiment import Scenario, Sweep
+from repro.traces import DagConfig, TraceSpec, generate_dag_trace, generate_trace
+
+WEEK = 24 * 7
+CAP = 12
+REGIONS2 = ("south-australia", "ontario")
+
+
+def _fault_grid():
+    return {
+        "iid": lambda s: IidFaults(straggler_rate=0.15, failure_rate=0.05,
+                                   seed=s),
+        "correlated": lambda s: CorrelatedFaults(n_domains=4, rate=0.06,
+                                                 mean_duration=5.0, seed=s),
+        "preemption": lambda s: PreemptionFaults(rate=0.06, checkpoint_every=3,
+                                                 restore_slots=1, seed=s),
+    }
+
+
+FAULT_KINDS = sorted(_fault_grid())
+
+
+@pytest.fixture(scope="module")
+def world():
+    cluster = ClusterConfig.default(capacity=CAP)
+    ci = CarbonService.synthetic("south-australia", WEEK * 2 + 24 * 30, seed=31)
+    jobs = generate_trace(
+        TraceSpec(family="azure", hours=WEEK, capacity=CAP, seed=32),
+        cluster.queues)
+    return cluster, ci, jobs
+
+
+@pytest.fixture(scope="module")
+def geo_world():
+    geo = GeoCluster.split(CAP, REGIONS2)
+    mci = MultiRegionCarbonService.synthetic(REGIONS2, WEEK * 2 + 24 * 30,
+                                             seed=31)
+    jobs = generate_trace(
+        TraceSpec(family="azure", hours=WEEK, capacity=CAP, seed=32),
+        geo.queues)
+    return geo, mci, jobs
+
+
+@pytest.fixture(scope="module")
+def dag_world():
+    cluster = ClusterConfig.default(capacity=CAP)
+    ci = CarbonService.synthetic("california", WEEK * 2 + 24 * 30, seed=31)
+    jobs = generate_dag_trace(
+        TraceSpec(family="azure", hours=WEEK, capacity=CAP, seed=33),
+        DagConfig(), cluster.queues)
+    return cluster, ci, jobs
+
+
+def assert_identical(a, b, ctx=""):
+    assert a.carbon_g == b.carbon_g, ctx
+    assert a.energy_kwh == b.energy_kwh, ctx
+    np.testing.assert_array_equal(a.completion, b.completion, err_msg=ctx)
+    np.testing.assert_array_equal(a.violations, b.violations, err_msg=ctx)
+    np.testing.assert_array_equal(a.wait_slots, b.wait_slots, err_msg=ctx)
+    assert len(a.slots) == len(b.slots), ctx
+    for la, lb in zip(a.slots, b.slots):
+        assert la == lb, f"{ctx}: slot {la.slot}"
+    assert a.resilience == b.resilience, ctx
+
+
+# --- cross-engine parity per fault process -----------------------------------
+
+
+@pytest.mark.parametrize("fault_kind", FAULT_KINDS)
+@pytest.mark.parametrize("seed", [2, 9])
+def test_parity_plain(world, fault_kind, seed):
+    cluster, ci, jobs = world
+    mk = _fault_grid()[fault_kind]
+    for policy in (baselines.CarbonAgnosticPolicy,
+                   baselines.WaitAwhilePolicy):
+        rs = simulate(jobs, ci, cluster, policy(), horizon=WEEK,
+                      engine="scalar", faults=mk(seed))
+        rv = simulate(jobs, ci, cluster, policy(), horizon=WEEK,
+                      engine="vector", faults=mk(seed))
+        assert_identical(rs, rv, f"{fault_kind}/s{seed}/{policy.__name__}")
+        assert rv.resilience is not None
+        assert rv.resilience.lost_work_slots >= 0.0
+
+
+@pytest.mark.parametrize("fault_kind", FAULT_KINDS)
+@pytest.mark.parametrize("policy_cls", [GeoStaticPolicy, GeoFlexPolicy])
+def test_parity_geo(geo_world, fault_kind, policy_cls):
+    geo, mci, jobs = geo_world
+    mk = _fault_grid()[fault_kind]
+    rs = simulate(jobs, mci, geo, policy_cls(), horizon=WEEK,
+                  engine="scalar", faults=mk(5))
+    rv = simulate(jobs, mci, geo, policy_cls(), horizon=WEEK,
+                  engine="vector", faults=mk(5))
+    assert_identical(rs, rv, f"geo/{fault_kind}/{policy_cls.__name__}")
+    np.testing.assert_array_equal(rs.final_region, rv.final_region)
+    np.testing.assert_array_equal(rs.region_carbon_g, rv.region_carbon_g)
+
+
+@pytest.mark.parametrize("fault_kind", FAULT_KINDS)
+@pytest.mark.parametrize("policy_cls", [DagFcfsPolicy, DagCarbonPolicy])
+def test_parity_dag(dag_world, fault_kind, policy_cls):
+    cluster, ci, jobs = dag_world
+    mk = _fault_grid()[fault_kind]
+    rs = simulate(jobs, ci, cluster, policy_cls(), horizon=WEEK,
+                  engine="scalar", faults=mk(5))
+    rv = simulate(jobs, ci, cluster, policy_cls(), horizon=WEEK,
+                  engine="vector", faults=mk(5))
+    assert_identical(rs, rv, f"dag/{fault_kind}/{policy_cls.__name__}")
+
+
+# --- invariants --------------------------------------------------------------
+
+
+def test_correlated_outage_invariants(world):
+    """Capacity never negative, evicted jobs still run to completion, lost
+    work and eviction counters are consistent."""
+    cluster, ci, jobs = world
+    fm = CorrelatedFaults(n_domains=5, rate=0.15, mean_duration=5.0, seed=4)
+    res = simulate(jobs, ci, cluster, baselines.CarbonAgnosticPolicy(),
+                   horizon=WEEK, faults=fm)
+    assert all(sl.provisioned >= 0 for sl in res.slots)
+    assert all(sl.used <= max(sl.provisioned, 0) for sl in res.slots)
+    assert (res.completion >= 0).all()      # evictions delay, never strand
+    r = res.resilience
+    assert r.capacity_outages >= 1
+    assert r.evictions >= 1
+    assert r.lost_work_slots >= 0.0
+    assert r.mttr_slots >= 0.0
+
+
+def test_total_blackout_hits_max_overrun(world):
+    """A permanent full-cluster outage stops all progress: the engine still
+    terminates (max_overrun) and unfinished jobs stay at completion=-1."""
+    cluster, ci, jobs = world
+    sub = [j for j in jobs if j.arrival < 12][:6]
+    fm = CorrelatedFaults(n_domains=1, rate=1.0, mean_duration=1e9, seed=0)
+    res = simulate(sub, ci, cluster, baselines.CarbonAgnosticPolicy(),
+                   horizon=24, max_overrun=48, faults=fm)
+    assert (res.completion == -1).all()
+    # once the outage is revealed the scheduler sees zero capacity
+    assert all(sl.provisioned == 0 for sl in res.slots[1:])
+    assert all(sl.provisioned >= 0 for sl in res.slots)
+
+
+def test_available_capacity_never_negative():
+    fm = CorrelatedFaults(n_domains=3, rate=0.9, mean_duration=50.0, seed=1)
+    caps = np.array([4, 3, 3], dtype=np.int64)
+    fm.on_run_start(0, caps)
+    lo = 10
+    for t in range(60):
+        fm.begin_slot(t)
+        cap = fm.available_capacity(10)
+        assert cap >= 0
+        lo = min(lo, cap)
+        vec = fm.available_capacity_vec(caps)
+        assert (vec >= 0).all()
+        assert vec.sum() <= caps.sum()
+    # with that failure rate the whole cluster goes dark at some point
+    assert lo == 0
+
+
+# --- preemption semantics ----------------------------------------------------
+
+
+def _job(jid=0, length=10.0, comm=2.0):
+    return Job(job_id=jid, arrival=0, length=length, queue=0, delay=6,
+               profile=np.ones(2), comm_size=comm)
+
+
+def test_preemption_rollback_to_checkpoint():
+    fm = PreemptionFaults(rate=0.0, checkpoint_every=2,
+                          checkpoint_overhead=0.25, restore_slots=1,
+                          energy_kwh_per_gb=0.05, min_gb=1.0, seed=0)
+    fm.on_run_start(0, 8)
+    job = _job(length=10.0, comm=2.0)
+    k = np.array([2])
+    rem = 10.0
+    thr = np.array([1.0])
+    d1 = fm.apply(0, [job], k, np.array([rem]), thr)        # run slot
+    assert d1.factors[0] == 1.0 and d1.lost is None
+    rem -= thr[0] * d1.factors[0]
+    d2 = fm.apply(1, [job], k, np.array([rem]), thr)        # checkpoint slot
+    assert d2.factors[0] == 0.75
+    rem -= thr[0] * d2.factors[0]                            # rem = 8.25
+    d3 = fm.apply(2, [job], k, np.array([rem]), thr)        # run slot
+    rem -= thr[0] * d3.factors[0]                            # rem = 7.25
+    fm.rate = 1.0                                            # force a kill
+    d4 = fm.apply(3, [job], k, np.array([rem]), thr)
+    assert d4.factors[0] == 0.0
+    assert d4.lost[0] == pytest.approx(1.0)                  # back to ckpt
+    assert d4.extra_energy[0] == 0.05 * 2.0                  # restore GBs
+    fm.rate = 0.0
+    d5 = fm.apply(4, [job], k, np.array([rem + d4.lost[0]]), thr)
+    assert d5.factors[0] == 0.0                              # restoring
+    m = fm.run_metrics()
+    assert m.preemptions == 1
+    assert m.restore_energy_kwh == pytest.approx(0.1)
+    assert m.lost_work_slots == pytest.approx(2.0)           # rollback + slot
+
+
+def test_preemption_engine_run_costs_energy(world):
+    cluster, ci, jobs = world
+    clean = simulate(jobs, ci, cluster, baselines.CarbonAgnosticPolicy(),
+                     horizon=WEEK)
+    faulty = simulate(jobs, ci, cluster, baselines.CarbonAgnosticPolicy(),
+                      horizon=WEEK,
+                      faults=PreemptionFaults(rate=0.08, seed=2))
+    r = faulty.resilience
+    assert r.preemptions > 0
+    assert r.lost_work_slots > 0.0
+    assert r.restore_energy_kwh > 0.0
+    assert faulty.energy_kwh > clean.energy_kwh
+    assert clean.resilience is None
+
+
+# --- satellite 1: per-run RNG reset ------------------------------------------
+
+
+@pytest.mark.parametrize("fault_kind", FAULT_KINDS)
+def test_fault_instance_reusable_across_runs(world, fault_kind):
+    """One fault instance across two simulate() calls must give identical
+    results — on_run_start re-seeds the stream per run."""
+    cluster, ci, jobs = world
+    fm = _fault_grid()[fault_kind](7)
+    r1 = simulate(jobs, ci, cluster, baselines.CarbonAgnosticPolicy(),
+                  horizon=WEEK, faults=fm)
+    r2 = simulate(jobs, ci, cluster, baselines.CarbonAgnosticPolicy(),
+                  horizon=WEEK, faults=fm)
+    assert_identical(r1, r2, f"reuse/{fault_kind}")
+
+
+def test_legacy_draw_factors_adapter(world):
+    cluster, ci, jobs = world
+
+    class HalfSpeed:
+        def draw_factors(self, n):
+            return np.full(n, 0.5)
+
+    res = simulate(jobs, ci, cluster, baselines.CarbonAgnosticPolicy(),
+                   horizon=WEEK, faults=HalfSpeed())
+    clean = simulate(jobs, ci, cluster, baselines.CarbonAgnosticPolicy(),
+                     horizon=WEEK)
+    assert res.carbon_g > clean.carbon_g          # everything runs at half speed
+    assert res.resilience == ResilienceMetrics()  # adapter tracks nothing
+
+    with pytest.raises(TypeError, match="draw_factors"):
+        ensure_fault_process(object())
+    assert ensure_fault_process(None) is None
+    fm = IidFaults(seed=1)
+    assert ensure_fault_process(fm) is fm
+
+
+def test_fault_model_alias_is_iid():
+    assert FaultModel is IidFaults
+    fm = FaultModel(straggler_rate=0.1, failure_rate=0.05, seed=3)
+    assert fm.kind == "iid"
+    assert dataclasses.replace(fm) == fm
+
+
+# --- carbon-feed outages -----------------------------------------------------
+
+
+def _outage_service(**kw):
+    outage = CarbonDataOutage(**{"windows": ((10, 15),), "stale_after": 2,
+                                 **kw})
+    return CarbonService.synthetic("ontario", 400, seed=1, outage=outage)
+
+
+class TestDegradedView:
+    def test_staleness_and_ffill(self):
+        svc = _outage_service()
+        view = svc.degraded()
+        assert isinstance(view, DegradedCIView)
+        assert svc.degraded() is view                 # cached
+        assert view.staleness(9) == 0
+        assert view.staleness(10) == 1
+        assert view.staleness(14) == 5
+        assert view.staleness(15) == 0
+        assert view.ci(12) == svc.ci(9)               # last known good
+        assert view.ci(15) == svc.ci(15)
+        np.testing.assert_array_equal(view.trace[10:15],
+                                      np.full(5, svc.trace[9]))
+
+    def test_forecast_degrades_in_stages(self):
+        svc = _outage_service()
+        view = svc.degraded()
+        # fresh: the true model forecast
+        np.testing.assert_array_equal(view.forecast(9, 6), svc.forecast(9, 6))
+        # stale within threshold: the forecast issued at the last fresh
+        # slot, shifted onto the queried horizon
+        np.testing.assert_array_equal(view.forecast(11, 6),
+                                      svc.forecast(9, 8)[2:])
+        # stale past threshold: last-known-good + persistence
+        exp = PersistenceForecast().predict(view.trace, 13, 6)
+        np.testing.assert_array_equal(view.forecast(13, 6), exp)
+        np.testing.assert_array_equal(view.forecast_quantile(13, 6, q=0.9),
+                                      exp)
+
+    def test_fetch_backoff_schedule(self):
+        svc = _outage_service(backoff_base=1, backoff_cap=16)
+        view = svc.degraded()
+        fresh = view.fetch(9)
+        assert fresh.fresh and fresh.attempts == 0 and fresh.next_retry_in == 0
+        s1 = view.fetch(10)                           # staleness 1
+        assert not s1.fresh
+        assert (s1.staleness, s1.attempts, s1.next_retry_in) == (1, 1, 2)
+        s4 = view.fetch(13)                           # staleness 4
+        assert (s4.attempts, s4.next_retry_in) == (2, 3)
+        out = svc.outage
+        assert [out.retry_delay(a) for a in range(6)] == [1, 2, 4, 8, 16, 16]
+
+    def test_markov_mask_seeded_and_slot0_fresh(self):
+        out = CarbonDataOutage(rate=0.2, mean_duration=4.0, seed=5)
+        tr_a = np.linspace(100, 200, 300)
+        tr_b = np.linspace(300, 400, 300)
+        m1, m2 = out.stale_mask(300, tr_a), out.stale_mask(300, tr_a)
+        np.testing.assert_array_equal(m1, m2)         # deterministic
+        assert not m1[0]
+        assert m1.any()
+        # per-trace salt: aligned regions see independent outages
+        assert (m1 != out.stale_mask(300, tr_b)).any()
+
+    def test_no_outage_degraded_is_self(self):
+        svc = CarbonService.synthetic("ontario", 100, seed=1)
+        assert svc.degraded() is svc
+
+    def test_outage_validation(self):
+        with pytest.raises(ValueError, match="empty outage window"):
+            CarbonDataOutage(windows=((5, 5),))
+        with pytest.raises(ValueError, match="rate"):
+            CarbonDataOutage(rate=1.5)
+
+
+@pytest.mark.parametrize("policy_cls", [baselines.WaitAwhilePolicy,
+                                        baselines.CarbonScalerPolicy])
+def test_degraded_run_parity_and_metrics(world, policy_cls):
+    """Engines stay bit-identical when the policies read a degraded feed,
+    accounting stays on the true trace, and degraded time is recorded."""
+    cluster, _, jobs = world
+    kw = {"mean_length": 2.5} if policy_cls is baselines.CarbonScalerPolicy \
+        else {}
+    ci = CarbonService.synthetic(
+        "south-australia", WEEK * 2 + 24 * 30, seed=31,
+        outage=CarbonDataOutage(rate=0.08, mean_duration=6.0, seed=2))
+    rs = simulate(jobs, ci, cluster, policy_cls(**kw), horizon=WEEK,
+                  engine="scalar")
+    rv = simulate(jobs, ci, cluster, policy_cls(**kw), horizon=WEEK,
+                  engine="vector")
+    assert_identical(rs, rv, f"degraded/{policy_cls.__name__}")
+    assert rv.resilience.degraded_slots > 0
+
+
+def test_degraded_geo_run(geo_world):
+    geo, _, jobs = geo_world
+    mci = MultiRegionCarbonService.synthetic(
+        REGIONS2, WEEK * 2 + 24 * 30, seed=31,
+        outage=CarbonDataOutage(rate=0.08, mean_duration=6.0, seed=2))
+    rs = simulate(jobs, mci, geo, GeoFlexPolicy(), horizon=WEEK,
+                  engine="scalar")
+    rv = simulate(jobs, mci, geo, GeoFlexPolicy(), horizon=WEEK,
+                  engine="vector")
+    assert_identical(rs, rv, "degraded/geo")
+    assert rv.resilience.degraded_slots > 0
+
+
+def test_degraded_plus_faults_compose(world):
+    cluster, _, jobs = world
+    ci = CarbonService.synthetic(
+        "south-australia", WEEK * 2 + 24 * 30, seed=31,
+        outage=CarbonDataOutage(rate=0.08, mean_duration=6.0, seed=2))
+    fm = CorrelatedFaults(rate=0.06, seed=3)
+    rs = simulate(jobs, ci, cluster, baselines.WaitAwhilePolicy(),
+                  horizon=WEEK, engine="scalar", faults=fm)
+    rv = simulate(jobs, ci, cluster, baselines.WaitAwhilePolicy(),
+                  horizon=WEEK, engine="vector", faults=fm)
+    assert_identical(rs, rv, "degraded+correlated")
+    assert rv.resilience.degraded_slots > 0
+    assert rv.resilience.capacity_outages > 0
+
+
+# --- serialization -----------------------------------------------------------
+
+
+class TestSerialization:
+    @pytest.mark.parametrize("fm", [
+        None,
+        IidFaults(straggler_rate=0.1, failure_rate=0.02, seed=3),
+        CorrelatedFaults(n_domains=6, rate=0.04, mean_duration=7.0, seed=4),
+        PreemptionFaults(rate=0.03, checkpoint_every=6, restore_slots=2,
+                         seed=5),
+    ], ids=["none", "iid", "correlated", "preemption"])
+    def test_scenario_json_round_trip(self, fm):
+        sc = Scenario(faults=fm,
+                      ci_outage=CarbonDataOutage(rate=0.05, seed=9,
+                                                 stale_after=4))
+        back = Scenario.from_json(sc.to_json())
+        assert back == sc
+        assert back.faults == fm
+        assert back.ci_outage == sc.ci_outage
+
+    def test_windows_round_trip_through_json_lists(self):
+        out = CarbonDataOutage(windows=((3, 7), (20, 24)))
+        back = outage_from_dict(json.loads(json.dumps(outage_to_dict(out))))
+        assert back == out
+        assert back.windows == ((3, 7), (20, 24))
+        assert outage_to_dict(None) is None
+        assert outage_from_dict(None) is None
+
+    def test_legacy_fault_payload_resolves_to_iid(self):
+        legacy = {"straggler_rate": 0.2, "straggler_slowdown": 0.5,
+                  "failure_rate": 0.1, "seed": 4}
+        fm = fault_from_dict(legacy)
+        assert fm == IidFaults(straggler_rate=0.2, failure_rate=0.1, seed=4)
+        sc = Scenario.from_dict({"faults": dict(legacy)})
+        assert sc.faults == fm
+
+    def test_unknown_fault_kind_names_registry(self):
+        with pytest.raises(ValueError) as e:
+            fault_from_dict({"kind": "cosmic-rays"})
+        msg = str(e.value)
+        for kind in ("correlated", "iid", "preemption"):
+            assert kind in msg
+        with pytest.raises(ValueError, match="cosmic-rays"):
+            Scenario.from_json(json.dumps({"faults": {"kind": "cosmic-rays"}}))
+        with pytest.raises(ValueError, match="unknown carbon-outage kind"):
+            outage_from_dict({"kind": "bogus"})
+
+    def test_fault_to_dict_rejects_foreign_objects(self):
+        with pytest.raises(ValueError, match="unregistered fault kind"):
+            fault_to_dict(object())
+        assert fault_to_dict(None) is None
+
+    def test_fault_labels(self):
+        assert fault_label(None) == "none"
+        assert fault_label(IidFaults(straggler_rate=0.1, failure_rate=0.05)) \
+            == "straggler=0.1,failure=0.05"
+        assert fault_label(CorrelatedFaults(n_domains=4, rate=0.05,
+                                            mean_duration=8.0)) \
+            == "outage(d=4,p=0.05,len=8)"
+        assert fault_label(PreemptionFaults(rate=0.05, checkpoint_every=4)) \
+            == "preempt(p=0.05,ckpt=4)"
+
+    def test_sweep_fault_label_reexport(self):
+        from repro.experiment.sweep import fault_label as sweep_label
+        assert sweep_label is fault_label
+
+
+# --- sweep integration -------------------------------------------------------
+
+
+def test_sweep_fault_axis_mixes_kinds():
+    sweep = Sweep(
+        base=Scenario(capacity=16, learn_weeks=1, eval_weeks=1, seed=11,
+                      region="ontario"),
+        policies=("carbon-agnostic", "wait-awhile"),
+        faults=[None, CorrelatedFaults(rate=0.06, seed=2)])
+    rows = sweep.run().rows()
+    assert len(rows) == 4
+    labels = {r["fault"] for r in rows}
+    assert labels == {"none", "outage(d=4,p=0.06,len=8)"}
+    for r in rows:
+        if r["fault"] == "none":
+            assert "resilience" not in r
+        else:
+            assert r["resilience"]["capacity_outages"] >= 0
+
+
+@pytest.mark.slow
+def test_chaos_sweep_outage_x_preemption_grid():
+    """Chaos grid: fault kinds x feed outage, three policies, two seeds —
+    everything must stay finite, labeled, and savings-comparable."""
+    sweep = Sweep(
+        base=Scenario(capacity=20, learn_weeks=1, eval_weeks=1,
+                      region="south-australia",
+                      ci_outage=CarbonDataOutage(rate=0.04, mean_duration=6.0,
+                                                 seed=1)),
+        seeds=(7, 8),
+        policies=("carbon-agnostic", "wait-awhile", "carbonflex"),
+        faults=[None,
+                CorrelatedFaults(n_domains=4, rate=0.05, seed=2),
+                PreemptionFaults(rate=0.05, checkpoint_every=4, seed=2)])
+    res = sweep.run()
+    rows = res.rows()
+    assert len(rows) == 2 * 3 * 3
+    assert {r["fault"] for r in rows} == {
+        "none", "outage(d=4,p=0.05,len=8)", "preempt(p=0.05,ckpt=4)"}
+    for r in rows:
+        assert np.isfinite(r["carbon_g"]) and r["carbon_g"] > 0
+        assert "resilience" in r     # ci_outage degrades every cell
+        assert r["resilience"]["degraded_slots"] > 0
+    # the JSON round-trip keeps the resilience columns
+    back = json.loads(res.to_json())
+    assert back["rows"][0]["resilience"]["degraded_slots"] > 0
