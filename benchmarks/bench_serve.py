@@ -1,0 +1,137 @@
+"""Serving-engine benchmark: ``PYTHONPATH=src python -m benchmarks.bench_serve``.
+
+Times the request-serving engine (``repro.serving``) on a 2-week,
+1.5M-requests/day diurnal trace — the ISSUE-7 acceptance scale — and emits
+``BENCH_serve.json`` at the repo root:
+
+- per serve policy: scalar reference vs vector path (parity asserted on
+  every aggregate while timing) and the simulated-requests-routed/sec
+  throughput of the vector path (the per-slot demand binning is what makes
+  millions of requests per day tractable — the engine never touches a
+  request individually);
+- the serve-flex vs serve-static carbon savings and both SLO-violation
+  rates at this scale, so the headline quality-for-carbon trade is tracked
+  across PRs alongside the throughput.
+
+``--smoke`` shrinks to one evaluation week and skips the
+BENCH_serve.json write so recorded numbers stay full-scale.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.experiment import Scenario, ServingConfig, WEEK, prepare_context
+from repro.experiment.registry import make_policy
+from repro.serving import ServeCase, simulate_serving
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+POLICIES = ("serve-static", "serve-greedy", "serve-flex")
+
+
+def _timed(fn, repeats: int = 3):
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t)
+    return best, out
+
+
+def run_all(full: bool = False, smoke: bool = False) -> dict:
+    sc = Scenario(
+        serving=ServingConfig(requests_per_day=6e6 if full else 1.5e6),
+        learn_weeks=1, eval_weeks=1 if smoke else 2, seed=7)
+    mat = sc.materialize()
+    ctx = prepare_context(mat, POLICIES)
+    horizon = sc.eval_weeks * WEEK
+    demand = mat.serving.demand[mat.t0: mat.t0 + horizon]
+    total_requests = float(demand.sum())
+
+    def case(name: str) -> ServeCase:
+        return ServeCase(demand=demand, rate=mat.serving.rate, ci=mat.ci,
+                         config=mat.serving.config,
+                         policy=make_policy(name, ctx), t0=mat.t0,
+                         label=name)
+
+    res: dict = {"scale": {"requests_per_day": sc.serving.requests_per_day,
+                           "slots": len(demand),
+                           "total_requests": total_requests,
+                           "servers": sc.serving.servers,
+                           "full": bool(full)}}
+    carbon: dict[str, float] = {}
+    for name in POLICIES:
+        t_s, rs = _timed(lambda n=name: simulate_serving(case(n),
+                                                         engine="scalar"))
+        t_v, rv = _timed(lambda n=name: simulate_serving(case(n),
+                                                         engine="vector"))
+        assert rs.carbon_g == rv.carbon_g          # parity while timing
+        assert rs.energy_kwh == rv.energy_kwh
+        assert np.array_equal(rs.serving.balance, rv.serving.balance)
+        assert rs.serving.tier_requests == rv.serving.tier_requests
+        carbon[name] = rv.carbon_g
+        res[name] = {
+            "scalar_s": round(t_s, 4), "vector_s": round(t_v, 4),
+            "speedup": round(t_s / t_v, 1),
+            "requests_routed_per_s": int(total_requests / t_v),
+            "carbon_kg": round(rv.carbon_g / 1e3, 1),
+            "violation_rate": round(rv.serving.violation_rate, 5),
+            "quality_mean": round(rv.serving.quality_mean, 5),
+            "ledger_range": [round(rv.serving.ledger_min, 4),
+                             round(rv.serving.ledger_max, 4)],
+        }
+    res["flex_savings_vs_static_pct"] = round(
+        100.0 * (1.0 - carbon["serve-flex"] / carbon["serve-static"]), 2)
+    return res
+
+
+def csv_rows(res: dict) -> list[str]:
+    rows = []
+    for name in POLICIES:
+        d = res[name]
+        rows.append(f"bench_serve/{name},{d['vector_s'] * 1e6:.0f},"
+                    f"req_per_s={d['requests_routed_per_s']}"
+                    f";speedup={d['speedup']}x"
+                    f";viol={d['violation_rate']}")
+    rows.append(f"bench_serve/flex_vs_static,0,"
+                f"savings={res['flex_savings_vs_static_pct']}%"
+                f";total_requests={res['scale']['total_requests']:.0f}")
+    return rows
+
+
+def run_and_report(out_path: str | None = None, full: bool = False,
+                   smoke: bool = False) -> dict:
+    res = run_all(full, smoke)
+    for row in csv_rows(res):
+        print(row)
+    assert res["flex_savings_vs_static_pct"] > 0, (
+        "serve-flex shows no carbon savings over serve-static")
+    if smoke and out_path is None:
+        print("smoke run: BENCH_serve.json left untouched")
+        return res
+    path = out_path or os.path.join(ROOT, "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+        f.write("\n")
+    print(f"wrote {os.path.abspath(path)}")
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, help="output JSON path")
+    ap.add_argument("--full", action="store_true",
+                    help="6M requests/day instead of the 1.5M default")
+    ap.add_argument("--smoke", action="store_true",
+                    help="one-week CI smoke (no BENCH_serve.json)")
+    args = ap.parse_args()
+    run_and_report(args.out, args.full, args.smoke)
+
+
+if __name__ == "__main__":
+    main()

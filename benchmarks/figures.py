@@ -251,7 +251,11 @@ def resilience() -> dict:
                   seeds=seeds, policies=policies).run()
     return {"baseline": grid.baseline,
             "degradation": agg(grid.rows()),
-            "stale_feed": agg(blind.rows())}
+            "stale_feed": agg(blind.rows()),
+            # full per-cell tables (SweepResult.to_csv) — benchmarks.run
+            # writes these to results/bench/resilience_<section>.csv
+            "csv": {"degradation": grid.to_csv(),
+                    "stale_feed": blind.to_csv()}}
 
 
 ALL = {

@@ -283,6 +283,52 @@ class ResilienceMetrics:
 
 
 @dataclasses.dataclass
+class ServingMetrics:
+    """Request-serving accounting of one simulated window
+    (``serving/engine.py``) — the interactive-traffic counterpart of the
+    per-job arrays, which stay empty on serving runs.
+
+    Lives here (like :class:`ResilienceMetrics`) so :class:`SimResult`
+    never imports the serving package.  The trajectory arrays
+    (``balance`` / ``utilization`` / ``quality`` / ``violation_frac``,
+    one entry per slot) are in-memory extras for figures and tests and
+    are dropped by ``to_dict``."""
+
+    requests: float = 0.0
+    violated_requests: float = 0.0        # SLO-violating requests
+    quality_mean: float = 1.0             # request-weighted quality
+    ledger_final: float = 0.0
+    ledger_min: float = 0.0
+    ledger_max: float = 0.0
+    tier_names: tuple[str, ...] = ()
+    tier_requests: tuple[float, ...] = ()
+    balance: np.ndarray | None = None
+    utilization: np.ndarray | None = None
+    quality: np.ndarray | None = None
+    violation_frac: np.ndarray | None = None
+
+    @property
+    def violation_rate(self) -> float:
+        """Fraction of requests that blew the latency SLO."""
+        if self.requests <= 0:
+            return 0.0
+        return float(self.violated_requests / self.requests)
+
+    def to_dict(self) -> dict:
+        return {
+            "requests": float(self.requests),
+            "violated_requests": float(self.violated_requests),
+            "violation_rate": self.violation_rate,
+            "quality_mean": float(self.quality_mean),
+            "ledger_final": float(self.ledger_final),
+            "ledger_min": float(self.ledger_min),
+            "ledger_max": float(self.ledger_max),
+            "tier_names": list(self.tier_names),
+            "tier_requests": [float(x) for x in self.tier_requests],
+        }
+
+
+@dataclasses.dataclass
 class SimResult:
     """Aggregate result of one simulated window under one policy."""
 
@@ -306,6 +352,10 @@ class SimResult:
     # Recovery metrics (core/faults.py); None on fault-free, fresh-feed
     # runs so pre-resilience payloads (and golden fixtures) are unchanged.
     resilience: ResilienceMetrics | None = None
+    # Serving metrics (serving/engine.py); None on batch runs so batch
+    # payloads (and golden fixtures) are unchanged.  On serving runs the
+    # per-job arrays are empty and violation_rate is request-weighted.
+    serving: ServingMetrics | None = None
 
     @property
     def mean_wait(self) -> float:
@@ -313,6 +363,8 @@ class SimResult:
 
     @property
     def violation_rate(self) -> float:
+        if self.serving is not None:
+            return self.serving.violation_rate
         return float(np.mean(self.violations)) if len(self.violations) else 0.0
 
     def savings_vs(self, baseline: "SimResult") -> float:
@@ -346,6 +398,8 @@ class SimResult:
             d["migration_carbon_g"] = float(self.migration_carbon_g)
         if self.resilience is not None:
             d["resilience"] = self.resilience.to_dict()
+        if self.serving is not None:
+            d["serving"] = self.serving.to_dict()
         if include_per_job:
             d["wait_slots"] = np.asarray(self.wait_slots, dtype=float).tolist()
             d["violations"] = np.asarray(self.violations, dtype=bool).tolist()

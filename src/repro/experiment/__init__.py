@@ -17,7 +17,9 @@ The single public entry point for running the paper's pipeline:
 - ``Sweep``      — cartesian (regions x seeds x faults x forecasts x
                    policies) grids dispatched as one ``simulate_many``
                    batch, aggregated by ``SweepResult`` (savings vs a
-                   named baseline, dispersion, JSON round-trip);
+                   named baseline, dispersion, JSON + CSV export);
+                   serving grids (``Scenario(serving=...)``) dispatch
+                   through the request-serving engine instead;
 - ``OracleGap``  — the §Forecast harness: per-cell savings-gap-to-oracle
                    under a forecast-error ladder (``sigma_ladder``) and
                    the degradation curve per policy.
@@ -36,11 +38,13 @@ Quickstart::
 """
 from . import registry  # noqa: F401
 from .driver import (DEFAULT_DAG_POLICIES, DEFAULT_GEO_POLICIES,  # noqa: F401
-                     DEFAULT_POLICIES, ExperimentResult, prepare_context,
-                     run)
+                     DEFAULT_POLICIES, DEFAULT_SERVE_POLICIES,
+                     ExperimentResult, prepare_context, run)
 from .oracle_gap import (DEFAULT_GAP_POLICIES, OracleGap,  # noqa: F401
                          OracleGapResult, sigma_ladder)
 from .registry import (PolicyContext, PolicySpec, available_policies,  # noqa: F401
                        make_policy, register_policy)
+from repro.serving import ServingConfig  # noqa: F401  (scenario convenience)
+
 from .scenario import WEEK, MaterializedScenario, Scenario  # noqa: F401
 from .sweep import Sweep, SweepResult  # noqa: F401

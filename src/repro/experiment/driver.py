@@ -21,6 +21,7 @@ from repro.core.knowledge import KnowledgeBase
 from repro.core.policy import learn_window
 from repro.core.simulator import SimCase, simulate_many
 from repro.core.types import SimResult
+from repro.serving import ServeCase, simulate_serving_many
 
 from .registry import (PolicyContext, check_scenario_policies, get_spec,
                        make_policy, needs_kb)
@@ -40,6 +41,11 @@ DEFAULT_GEO_POLICIES: tuple[str, ...] = (
 #: The precedence-aware comparison set (scenarios with a DAG workload).
 DEFAULT_DAG_POLICIES: tuple[str, ...] = (
     "dag-fcfs", "dag-carbon", "dag-cap",
+)
+
+#: The request-serving comparison set (scenarios with a serving workload).
+DEFAULT_SERVE_POLICIES: tuple[str, ...] = (
+    "serve-static", "serve-greedy", "serve-flex",
 )
 
 
@@ -99,9 +105,27 @@ class ExperimentResult:
         return float(waits.mean()) if len(waits) else 0.0
 
     def violation_rate(self, policy: str) -> float:
-        v = np.concatenate([r.violations for r in self.weekly[policy]]) \
-            if self.weekly[policy] else np.zeros(0, dtype=bool)
+        rs = self.weekly[policy]
+        if rs and rs[0].serving is not None:
+            # serving runs: request-weighted SLO-violation rate
+            req = sum(r.serving.requests for r in rs)
+            if req <= 0:
+                return 0.0
+            return float(sum(r.serving.violated_requests for r in rs) / req)
+        v = np.concatenate([r.violations for r in rs]) \
+            if rs else np.zeros(0, dtype=bool)
         return float(v.mean()) if len(v) else 0.0
+
+    def quality_mean(self, policy: str) -> float:
+        """Request-weighted served quality (serving runs; 1.0 otherwise)."""
+        rs = self.weekly[policy]
+        if not rs or rs[0].serving is None:
+            return 1.0
+        req = sum(r.serving.requests for r in rs)
+        if req <= 0:
+            return 1.0
+        return float(sum(r.serving.quality_mean * r.serving.requests
+                         for r in rs) / req)
 
     def savings(self, policy: str, baseline: str | None = None) -> float:
         """Carbon savings (%) of ``policy`` vs ``baseline`` in this run
@@ -127,7 +151,8 @@ class ExperimentResult:
                     f"baseline {baseline!r} was not part of this run; "
                     f"policies: {', '.join(self.weekly)}")
             return baseline
-        for cand in ("carbon-agnostic", "geo-static", "dag-fcfs"):
+        for cand in ("carbon-agnostic", "geo-static", "dag-fcfs",
+                     "serve-static"):
             if cand in self.weekly:
                 return cand
         return None
@@ -143,6 +168,10 @@ class ExperimentResult:
                 "mean_wait_h": self.mean_wait(name),
                 "violation_rate": self.violation_rate(name),
             }
+            rs = self.weekly[name]
+            if rs and rs[0].serving is not None:
+                m["quality_mean"] = round(self.quality_mean(name), 5)
+                m["ledger_final"] = round(rs[-1].serving.ledger_final, 4)
             if base:
                 m["savings_pct"] = round(self.savings(name, base), 2)
             out[name] = m
@@ -190,15 +219,43 @@ def run(
     if policies is None:
         policies = (DEFAULT_GEO_POLICIES if scenario.is_geo
                     else DEFAULT_DAG_POLICIES if scenario.is_dag
+                    else DEFAULT_SERVE_POLICIES if scenario.is_serving
                     else DEFAULT_POLICIES)
     names = tuple(policies)
-    check_scenario_policies(names, scenario.is_geo, scenario.is_dag)
+    check_scenario_policies(names, scenario.is_geo, scenario.is_dag,
+                            scenario.is_serving)
     t_start = time.perf_counter()
     mat = scenario.materialize()
     ctx = prepare_context(mat, names, kb_kwargs=kb_kwargs, backend=backend,
                           forecast_quantile=forecast_quantile)
     instances = {n: make_policy(n, ctx) for n in names}
     weekly: dict[str, list[SimResult]] = {n: [] for n in names}
+
+    if scenario.is_serving:
+        # Serving evaluation: week-sliced demand through the serving
+        # engine (no learning loop — there is no knowledge base to roll;
+        # each week starts a fresh ledger, the debt/credit carry being a
+        # per-window contract).
+        for w in range(scenario.eval_weeks):
+            t0 = mat.t0 + w * WEEK
+            cases = [ServeCase(demand=mat.serving.demand[t0: t0 + WEEK],
+                               rate=mat.serving.rate, ci=mat.ci,
+                               config=mat.serving.config,
+                               policy=instances[n], t0=t0, label=n)
+                     for n in names]
+            for n, res in zip(names, simulate_serving_many(cases)):
+                weekly[n].append(res)
+            if progress is not None:
+                agg = {n: sum(r.carbon_g for r in weekly[n]) for n in names}
+                base = agg.get("serve-static")
+                parts = [f"week {w + 1}/{scenario.eval_weeks}"]
+                if base:
+                    parts += [f"{n}={100 * (1 - c / base):.1f}%"
+                              for n, c in agg.items() if n != "serve-static"]
+                progress("  ".join(parts))
+        return ExperimentResult(
+            scenario=scenario, policies=names, weekly=weekly, kb_size=0,
+            runtime_s=time.perf_counter() - t_start)
 
     for w in range(scenario.eval_weeks):
         t0 = mat.t0 + w * WEEK

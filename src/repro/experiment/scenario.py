@@ -23,8 +23,11 @@ from repro.core.forecast import (ForecastModel, forecast_from_dict,
                                  forecast_to_dict)
 from repro.core.types import (ClusterConfig, GeoCluster, Job, MigrationModel,
                               QueueConfig, default_queues)
+from repro.serving import MaterializedServing, ServingConfig
 from repro.traces import (DagConfig, TraceSpec, dag_mean_task_length,
-                          generate_dag_trace, generate_trace, mean_length)
+                          expected_request_rate, generate_dag_trace,
+                          generate_request_demand, generate_trace,
+                          mean_length)
 
 WEEK = 24 * 7
 # CI margin past the nominal trace so run-to-completion overruns stay
@@ -50,10 +53,18 @@ class MaterializedScenario:
     # comparisons; ``cluster`` keeps the aggregate total capacity.
     mci: MultiRegionCarbonService | None = None
     geo: GeoCluster | None = None
+    # Serving-scenario extras (None for batch scenarios): the serving
+    # config + realized demand / expected-rate curves; the job lists are
+    # then empty (interactive requests are never materialized per-request).
+    serving: MaterializedServing | None = None
 
     @property
     def is_geo(self) -> bool:
         return self.geo is not None
+
+    @property
+    def is_serving(self) -> bool:
+        return self.serving is not None
 
     @property
     def ev(self) -> list[Job]:
@@ -128,6 +139,13 @@ class Scenario:
     # Carbon-feed outage injection (core/faults.py): the policies' CI view
     # goes stale/ffilled during outage windows while accounting stays true.
     ci_outage: CarbonDataOutage | None = None
+    # Serving workload (repro.serving): a non-None ServingConfig turns the
+    # scenario into an interactive request-serving world — per-slot demand
+    # vectors routed across precision tiers by the serve-* policy family
+    # instead of batch jobs.  Serving composes with `forecast` and
+    # `ci_outage` (the policies read the same degraded CI views) but not
+    # with `dag`, `regions`, or `faults`.
+    serving: ServingConfig | None = None
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "regions", tuple(self.regions))
@@ -147,6 +165,22 @@ class Scenario:
                              "either `dag` or `regions`")
         if self.learn_weeks < 1 or self.eval_weeks < 1:
             raise ValueError("learn_weeks and eval_weeks must be >= 1")
+        if self.serving is not None:
+            if self.dag is not None:
+                raise ValueError(
+                    "serving scenarios carry no batch workload — a DAG has "
+                    "nothing to schedule there; drop either `serving` or "
+                    "`dag`")
+            if self.regions:
+                raise ValueError(
+                    "serving scenarios are single-region (the serving "
+                    "engine does not route across regions yet); drop "
+                    "either `serving` or `regions`")
+            if self.faults is not None:
+                raise ValueError(
+                    "serving scenarios do not take a batch fault process "
+                    "(requests are never suspended or evicted); carbon-"
+                    "feed outages via `ci_outage` are supported")
 
     @property
     def is_geo(self) -> bool:
@@ -155,6 +189,10 @@ class Scenario:
     @property
     def is_dag(self) -> bool:
         return self.dag is not None
+
+    @property
+    def is_serving(self) -> bool:
+        return self.serving is not None
 
     # --- derived geometry ---------------------------------------------------
 
@@ -213,6 +251,30 @@ class Scenario:
                                          model=self.forecast,
                                          outage=self.ci_outage)
         spec = self.trace_spec()
+        if self.serving is not None:
+            # Serving worlds have no job trace: the workload is the
+            # per-slot demand vector (seed + 2 keeps the request stream
+            # independent of the CI trace (seed) and the batch-job stream
+            # (seed + 1)); `rate` extends a day past the nominal span so
+            # policy look-ahead near the window end stays on real data.
+            sv = self.serving
+            demand = generate_request_demand(
+                self.hours, sv.requests_per_day, seed=self.seed + 2,
+                diurnal=sv.diurnal, weekly=sv.weekly,
+                peak_hour=sv.peak_hour, burst_rate=sv.burst_rate,
+                burst_mult=sv.burst_mult,
+                burst_mean_slots=sv.burst_mean_slots)
+            rate = expected_request_rate(
+                self.hours + 24, sv.requests_per_day, diurnal=sv.diurnal,
+                weekly=sv.weekly, peak_hour=sv.peak_hour)
+            mat = MaterializedScenario(
+                scenario=self, cluster=cluster, ci=ci, spec=spec,
+                jobs=[], hist=[], eval_jobs=[], t0=self.t0,
+                mean_length=0.0,
+                serving=MaterializedServing(config=sv, demand=demand,
+                                            rate=rate))
+            object.__setattr__(self, "_materialized", mat)
+            return mat
 
         def _gen(s: TraceSpec) -> list[Job]:
             if self.dag is not None:
@@ -252,6 +314,8 @@ class Scenario:
             d["dag"] = {**dataclasses.asdict(self.dag),
                         "shapes": list(self.dag.shapes)}
         d["forecast"] = forecast_to_dict(self.forecast)
+        if self.serving is not None:
+            d["serving"] = dataclasses.asdict(self.serving)
         return d
 
     @classmethod
@@ -272,6 +336,8 @@ class Scenario:
             d["dag"] = DagConfig(**d["dag"])
         if d.get("forecast"):
             d["forecast"] = forecast_from_dict(d["forecast"])
+        if d.get("serving"):
+            d["serving"] = ServingConfig(**d["serving"])
         return cls(**d)
 
     def to_json(self, indent: int | None = None) -> str:

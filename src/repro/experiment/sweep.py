@@ -25,6 +25,7 @@ from repro.core.faults import FaultProcess, fault_label  # noqa: F401  (re-expor
 from repro.core.forecast import ForecastModel, forecast_labels
 from repro.core.simulator import SimCase, simulate_many
 from repro.core.types import SimResult
+from repro.serving import ServeCase, simulate_serving_many
 
 from .driver import DEFAULT_POLICIES, _fresh_faults, prepare_context
 from .registry import check_scenario_policies, make_policy
@@ -91,11 +92,13 @@ class Sweep:
 
     def effective_baseline(self) -> str:
         """The status-quo policy of the grid's kind replaces the
-        single-region default on geo / DAG grids."""
+        single-region default on geo / DAG / serving grids."""
         if self.base.is_geo and self.baseline == "carbon-agnostic":
             return "geo-static"
         if self.base.is_dag and self.baseline == "carbon-agnostic":
             return "dag-fcfs"
+        if self.base.is_serving and self.baseline == "carbon-agnostic":
+            return "serve-static"
         return self.baseline
 
     def scenarios(self) -> list[Scenario]:
@@ -119,13 +122,17 @@ class Sweep:
         baseline = self.effective_baseline()
         if baseline not in names:
             names = (baseline,) + names
-        check_scenario_policies(names, self.base.is_geo, self.base.is_dag)
+        check_scenario_policies(names, self.base.is_geo, self.base.is_dag,
+                                self.base.is_serving)
         return names
 
     def run(self, progress: Callable[[str], None] | None = None) -> "SweepResult":
         names = self._policy_names()
         baseline = self.effective_baseline()
         with_forecast = self.has_forecast_axis()
+        if self.base.is_serving:
+            return self._run_serving(names, baseline, with_forecast,
+                                     progress)
         # Disambiguated per-axis-entry labels (e.g. two NoisyForecasts of
         # equal sigma but different seed -> "noisy(s=0.2)"/"noisy(s=0.2)#2")
         # so the per-cell savings grouping below cannot merge distinct
@@ -174,6 +181,61 @@ class Sweep:
         _attach_savings(rows, baseline)
         return SweepResult(baseline=baseline, rows_=rows,
                            results=results)
+
+    def _run_serving(self, names, baseline: str, with_forecast: bool,
+                     progress) -> "SweepResult":
+        """Serving grids: same (regions x seeds x forecasts x policies)
+        expansion, dispatched through ``simulate_serving_many`` instead of
+        the batch engine.  The fault axis stays batch-only (requests are
+        never suspended); Scenario validation already rejects base faults,
+        so only an explicit sweep axis needs rejecting here."""
+        if self.faults is not None and any(f is not None
+                                           for f in self.faults):
+            raise ValueError(
+                "serving sweeps take no fault axis (requests are never "
+                "suspended or evicted); use `forecasts` or a base "
+                "`ci_outage` to stress serving policies")
+        axis_labels = forecast_labels(self.forecast_axis())
+        scenarios = self.scenarios()
+        assert not axis_labels or len(scenarios) % len(axis_labels) == 0
+        cases: list[ServeCase] = []
+        meta: list[dict] = []
+        for i, sc in enumerate(scenarios):
+            mat = sc.materialize()
+            fc_label = axis_labels[i % len(axis_labels)]
+            ctx = prepare_context(mat, names, kb_kwargs=self.kb_kwargs,
+                                  backend=self.backend,
+                                  forecast_quantile=self.forecast_quantile)
+            horizon = sc.eval_weeks * WEEK
+            demand = mat.serving.demand[mat.t0: mat.t0 + horizon]
+            if progress is not None:
+                progress(f"prepared {sc.region}/seed{sc.seed}"
+                         + (f"/{fc_label}" if with_forecast else "")
+                         + f": {len(demand)} slots, "
+                         f"{demand.sum() / 1e6:.2f}M requests")
+            for name in names:
+                cases.append(ServeCase(
+                    demand=demand, rate=mat.serving.rate, ci=mat.ci,
+                    config=mat.serving.config,
+                    policy=make_policy(name, ctx), t0=mat.t0,
+                    label=f"{sc.region}/s{sc.seed}/{name}"
+                          + (f"/{fc_label}" if with_forecast else "")))
+                row = {"region": sc.region, "seed": sc.seed,
+                       "fault": "none", "policy": name}
+                if with_forecast:
+                    row["forecast"] = fc_label
+                meta.append(row)
+        results = simulate_serving_many(cases)
+        rows = []
+        for m, r in zip(meta, results):
+            rows.append({**m, **r.to_dict()})
+        _attach_savings(rows, baseline)
+        return SweepResult(baseline=baseline, rows_=rows, results=results)
+
+    def to_csv(self) -> str:
+        """Run the sweep and export the rows as CSV
+        (:meth:`SweepResult.to_csv`)."""
+        return self.run().to_csv()
 
 
 def _attach_savings(rows: list[dict], baseline: str) -> None:
@@ -235,6 +297,43 @@ class SweepResult:
     def to_json(self, indent: int | None = 1) -> str:
         return json.dumps({"baseline": self.baseline, "rows": self.rows_,
                            "summary": self.summary()}, indent=indent)
+
+    def to_csv(self) -> str:
+        """Per-case rows as CSV text, one column per row key.
+
+        Nested dicts (``resilience``, ``serving``) flatten to dotted
+        columns (``serving.violation_rate``); list values (tier names /
+        counts) join with ``|`` so the payload stays one value per cell.
+        Columns appear in first-seen order across rows; rows missing a
+        column leave the cell empty — so heterogeneous sweeps (e.g. a
+        fault axis where only some rows carry resilience metrics) still
+        export as one rectangular table."""
+        import csv
+        import io
+
+        def flat(row: dict) -> dict:
+            out: dict = {}
+            for k, v in row.items():
+                if isinstance(v, dict):
+                    for kk, vv in v.items():
+                        out[f"{k}.{kk}"] = vv
+                else:
+                    out[k] = v
+            return {k: "|".join(str(x) for x in v)
+                    if isinstance(v, (list, tuple)) else v
+                    for k, v in out.items()}
+
+        flats = [flat(r) for r in self.rows_]
+        cols: dict[str, None] = {}
+        for f in flats:
+            for k in f:
+                cols.setdefault(k)
+        buf = io.StringIO()
+        writer = csv.DictWriter(buf, fieldnames=list(cols),
+                                restval="", lineterminator="\n")
+        writer.writeheader()
+        writer.writerows(flats)
+        return buf.getvalue()
 
     @classmethod
     def from_json(cls, payload: str) -> "SweepResult":

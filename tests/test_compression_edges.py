@@ -1,0 +1,63 @@
+"""Edge cases of the error-feedback gradient compressors (ISSUE-7
+satellite) — fast, pure-CPU checks that don't need the slow elastic
+end-to-end suite: the int8 scale floor on an all-zero gradient, top-k's
+k >= 1 clamp under a vanishing ratio, and bit-for-bit determinism of the
+compress -> residual step."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.elastic.compression import (_int8_roundtrip, _topk_roundtrip,
+                                       make_compressor)
+
+
+def test_int8_zero_gradient_hits_scale_floor():
+    """An all-zero tensor must round-trip to zeros (the 1e-12 scale floor
+    prevents a 0/0), leaving a zero residual — not NaNs."""
+    g = jnp.zeros((4, 8), jnp.float32)
+    rt = _int8_roundtrip(g)
+    assert np.array_equal(np.asarray(rt), np.zeros((4, 8)))
+    compress = make_compressor("int8")
+    sent, ef = compress({"w": g}, None)
+    assert np.all(np.isfinite(np.asarray(sent["w"])))
+    assert np.array_equal(np.asarray(sent["w"]), np.zeros((4, 8)))
+    assert np.array_equal(np.asarray(ef["w"], dtype=np.float32),
+                          np.zeros((4, 8)))
+
+
+def test_topk_tiny_ratio_clamps_k_to_one():
+    """ratio so small that ratio * n < 1 must still keep the single
+    largest-magnitude entry, never an empty selection."""
+    g = jnp.asarray(np.arange(1.0, 11.0, dtype=np.float32))
+    kept = np.asarray(_topk_roundtrip(g, ratio=1e-6))
+    assert np.count_nonzero(kept) == 1
+    assert kept[-1] == 10.0                         # the largest survives
+    compress = make_compressor("topk", ratio=1e-6)
+    sent, ef = compress({"w": g}, None)
+    assert np.count_nonzero(np.asarray(sent["w"])) == 1
+    # everything dropped lands in the residual for the next step
+    resid = np.asarray(ef["w"], dtype=np.float32)
+    assert np.count_nonzero(resid) == 9
+
+
+def test_compressor_residual_deterministic_across_identical_steps():
+    """Two runs of the same (grads, ef) step must produce bit-identical
+    sent gradients and residuals — the EF state is a pure function of its
+    inputs, no hidden RNG."""
+    rng = np.random.default_rng(11)
+    grads = {"a": jnp.asarray(rng.normal(size=(16, 4)).astype(np.float32)),
+             "b": jnp.asarray(rng.normal(size=(32,)).astype(np.float32))}
+    for kind in ("int8", "topk"):
+        compress = make_compressor(kind, ratio=0.25)
+        sent1, ef1 = compress(grads, None)
+        sent2, ef2 = compress(grads, None)
+        for k in grads:
+            assert np.array_equal(np.asarray(sent1[k]), np.asarray(sent2[k]))
+            assert np.array_equal(np.asarray(ef1[k], dtype=np.float32),
+                                  np.asarray(ef2[k], dtype=np.float32))
+        # and feeding the residual back is deterministic too
+        sent3, ef3 = compress(grads, ef1)
+        sent4, ef4 = compress(grads, ef2)
+        for k in grads:
+            assert np.array_equal(np.asarray(sent3[k]), np.asarray(sent4[k]))
+            assert np.array_equal(np.asarray(ef3[k], dtype=np.float32),
+                                  np.asarray(ef4[k], dtype=np.float32))

@@ -71,8 +71,9 @@ class TestRegistry:
     def test_all_policies_complete_tiny_scenario(self, tiny):
         """Round-trip: every registered single-region policy constructs via
         make_policy and completes the tiny scenario without error (geo
-        policies run on geo scenarios — tests/test_geo.py — and dag
-        policies on DAG scenarios — tests/test_dag.py)."""
+        policies run on geo scenarios — tests/test_geo.py — dag policies
+        on DAG scenarios — tests/test_dag.py — and serve policies on
+        serving scenarios — tests/test_serving.py)."""
         from repro.experiment.registry import get_spec
 
         names = available_policies()
@@ -80,9 +81,11 @@ class TestRegistry:
                               "carbonscaler", "vcc", "vcc-scaling",
                               "carbonflex", "carbonflex-mpc", "oracle",
                               "geo-static", "geo-greedy", "geo-flex",
-                              "dag-fcfs", "dag-carbon", "dag-cap"}
+                              "dag-fcfs", "dag-carbon", "dag-cap",
+                              "serve-static", "serve-greedy", "serve-flex"}
         names = tuple(n for n in names
-                      if not get_spec(n).geo and not get_spec(n).dag)
+                      if not get_spec(n).geo and not get_spec(n).dag
+                      and not get_spec(n).serve)
         res = run(tiny, names)
         for name in names:
             assert len(res.weekly[name]) == 1, name

@@ -15,7 +15,7 @@ import os
 
 from repro.core.forecast import (NoisyForecast, PerfectForecast,
                                  QuantileForecast)
-from repro.experiment import Scenario, Sweep
+from repro.experiment import Scenario, ServingConfig, Sweep
 from repro.traces import DagConfig
 
 FIXTURE = os.path.join(os.path.dirname(__file__), "data", "golden_sweep.json")
@@ -23,6 +23,8 @@ FIXTURE_DAG = os.path.join(os.path.dirname(__file__), "data",
                            "golden_sweep_dag.json")
 FIXTURE_FORECAST = os.path.join(os.path.dirname(__file__), "data",
                                 "golden_sweep_forecast.json")
+FIXTURE_SERVING = os.path.join(os.path.dirname(__file__), "data",
+                               "golden_sweep_serving.json")
 
 
 def golden_sweep() -> Sweep:
@@ -56,6 +58,19 @@ def golden_forecast_sweep() -> Sweep:
         policies=["carbon-agnostic", "wait-awhile", "wait-awhile-robust"],
         forecasts=[None, NoisyForecast(sigma=0.3, seed=5),
                    QuantileForecast(sigma=0.2, seed=5, members=7)])
+
+
+def golden_serving_sweep() -> Sweep:
+    """A small serving grid (ISSUE-7 satellite): 2 seeds x 3 serve
+    policies over a diurnal request trace — pins the request-trace
+    generator, the derived tier table, the credit ledger, and the serving
+    engine's accounting end-to-end."""
+    return Sweep(
+        base=Scenario(serving=ServingConfig(requests_per_day=2e5,
+                                            servers=12),
+                      learn_weeks=1, eval_weeks=1, seed=101),
+        seeds=[11, 12],
+        policies=["serve-static", "serve-greedy", "serve-flex"])
 
 
 def test_golden_sweep_reproduces_fixture_exactly():
@@ -146,6 +161,43 @@ def test_forecast_fixture_shape_sanity():
     assert noisy["wait-awhile"] != noisy["wait-awhile-robust"]
 
 
+def test_golden_serving_sweep_reproduces_fixture_exactly():
+    with open(FIXTURE_SERVING) as f:
+        want = json.load(f)
+    got = json.loads(golden_serving_sweep().run().to_json())
+    assert got["baseline"] == want["baseline"] == "serve-static"
+    assert len(got["rows"]) == len(want["rows"]) == 6
+    for g, w in zip(got["rows"], want["rows"]):
+        assert g == w, f"row drifted: {(w['seed'], w['policy'])}"
+    assert got["summary"] == want["summary"]
+    assert got == want
+
+
+def test_serving_fixture_shape_sanity():
+    with open(FIXTURE_SERVING) as f:
+        want = json.load(f)
+    rows = want["rows"]
+    assert {r["policy"] for r in rows} == {"serve-static", "serve-greedy",
+                                           "serve-flex"}
+    assert {r["seed"] for r in rows} == {11, 12}
+    assert all(r["carbon_g"] > 0 for r in rows)
+    assert all(-1.0 <= r["serving"]["ledger_min"]
+               <= r["serving"]["ledger_max"] <= 1.0 for r in rows)
+    flex = [r for r in rows if r["policy"] == "serve-flex"]
+    assert all(r["savings_pct"] > 0 for r in flex)
+
+
+def test_serving_is_additive_to_existing_fixtures():
+    """Regression for the serving subsystem being purely additive: running
+    a serving sweep first must leave the pre-existing batch golden rows
+    byte-identical (no shared RNG stream, no global state)."""
+    golden_serving_sweep().run()
+    with open(FIXTURE) as f:
+        want = json.load(f)
+    got = json.loads(golden_sweep().run().to_json())
+    assert got == want
+
+
 def test_fixture_shape_sanity():
     with open(FIXTURE) as f:
         want = json.load(f)
@@ -171,7 +223,8 @@ if __name__ == "__main__":
         os.makedirs(os.path.dirname(FIXTURE), exist_ok=True)
         for path, sweep in ((FIXTURE, golden_sweep()),
                             (FIXTURE_DAG, golden_dag_sweep()),
-                            (FIXTURE_FORECAST, golden_forecast_sweep())):
+                            (FIXTURE_FORECAST, golden_forecast_sweep()),
+                            (FIXTURE_SERVING, golden_serving_sweep())):
             payload = sweep.run().to_json()
             with open(path, "w") as f:
                 f.write(payload)

@@ -1,0 +1,328 @@
+"""Serving-tier tests (ISSUE 7): derived precision tiers, the quality
+credit ledger, the vectorized serving engine, and the experiment threading.
+
+Invariant families:
+
+- the tier table is *derived*, not asserted: the numpy quantization-error
+  replica is pinned against the jax ``elastic/compression.py`` original,
+  energy/capacity follow the byte-scaling decode argument;
+- the ledger is bounded in [-1, +1] at every slot under arbitrary quality
+  streams (hypothesis property + fixed-seed twin);
+- vector-vs-scalar engine parity is bit-identical for every serve policy,
+  with and without a degraded (noisy) carbon forecast;
+- demand conservation: every request lands on exactly one tier;
+- the experiment layer threads serving scenarios end-to-end (run / Sweep /
+  serialization round-trip) and rejects the axis combinations serving
+  excludes (dag, regions, faults, batch policies);
+- acceptance scale: a 1.5M-requests/day, 2-week sweep cell runs in
+  seconds.
+"""
+import dataclasses
+import json
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CarbonService, NoisyForecast
+from repro.core.faults import IidFaults
+from repro.experiment import (DEFAULT_SERVE_POLICIES, Scenario, Sweep, WEEK,
+                              run)
+from repro.serving import (CreditLedger, ServeCase, ServeFlexPolicy,
+                           ServeGreedyPolicy, ServeStaticPolicy,
+                           ServingConfig, SloModel, derive_tiers,
+                           mix_for_quality, simulate_serving)
+from repro.serving.tiers import _bf16_rms_rel_error, _int8_rms_rel_error
+from repro.traces import (DagConfig, expected_request_rate,
+                          generate_request_demand)
+
+SERVE_POLICIES = {
+    "serve-static": ServeStaticPolicy,
+    "serve-greedy": ServeGreedyPolicy,
+    "serve-flex": ServeFlexPolicy,
+}
+
+TINY = dict(requests_per_day=2e5, servers=12)
+
+
+# --- derived tier table ------------------------------------------------------
+
+
+def test_int8_error_replica_matches_jax_compression():
+    """The numpy replica of the int8 scheme (tiers quality input) must
+    track the jax ``_int8_roundtrip`` original on the same tensor."""
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.elastic.compression import _int8_roundtrip
+
+    g = np.random.default_rng(0).normal(0.0, 1.0, 1 << 14)
+    rt = np.asarray(_int8_roundtrip(jnp.asarray(g, dtype=jnp.float32)),
+                    dtype=np.float64)
+    jax_err = float(np.sqrt(np.mean((rt - g) ** 2) / np.mean(g ** 2)))
+    assert _int8_rms_rel_error() == pytest.approx(jax_err, rel=1e-3)
+
+
+def test_tier_table_byte_scaling_and_quality():
+    fp32, bf16, int8 = derive_tiers()
+    assert [t.name for t in (fp32, bf16, int8)] == ["fp32", "bf16", "int8"]
+    # energy scales with bytes moved, capacity inversely (memory-bound)
+    assert bf16.energy_kwh_per_kreq == fp32.energy_kwh_per_kreq / 2
+    assert int8.energy_kwh_per_kreq == fp32.energy_kwh_per_kreq / 4
+    assert bf16.capacity_per_server == fp32.capacity_per_server * 2
+    assert int8.capacity_per_server == fp32.capacity_per_server * 4
+    # quality strictly descending, derived from the measured rms errors
+    assert fp32.quality == 1.0
+    assert bf16.quality == pytest.approx(1.0 - 5.0 * _bf16_rms_rel_error())
+    assert int8.quality == pytest.approx(1.0 - 5.0 * _int8_rms_rel_error())
+    assert fp32.quality > bf16.quality > int8.quality > 0.9
+
+
+def test_mix_for_quality_hits_target_between_adjacent_tiers():
+    q = np.array([t.quality for t in derive_tiers()])
+    for target in (0.99, 0.98, 0.96):
+        frac = mix_for_quality(q, target)
+        assert frac.sum() == pytest.approx(1.0)
+        assert np.all(frac >= 0)
+        assert float(frac @ q) == pytest.approx(target)
+        assert np.count_nonzero(frac) <= 2        # adjacent pair only
+    # out-of-range targets clamp to the nearest pure tier
+    assert list(mix_for_quality(q, 1.5)) == [1, 0, 0]
+    assert list(mix_for_quality(q, 0.1)) == [0, 0, 1]
+
+
+def test_slo_model_knee_curve():
+    slo = SloModel(knee=0.75, gamma=2.0)
+    assert slo.violation_frac(0.5) == 0.0
+    assert slo.violation_frac(0.75) == 0.0
+    assert slo.violation_frac(1.0) == 1.0
+    assert slo.violation_frac(2.0) == 1.0          # saturates
+    u = np.linspace(0.0, 1.2, 50)
+    v = slo.violation_frac(u)
+    assert v.shape == u.shape
+    assert np.all(np.diff(v) >= 0)                 # monotone in utilization
+
+
+# --- request-trace generator -------------------------------------------------
+
+
+def test_request_trace_deterministic_and_scaled():
+    a = generate_request_demand(24 * 14, 1.5e6, seed=3)
+    b = generate_request_demand(24 * 14, 1.5e6, seed=3)
+    c = generate_request_demand(24 * 14, 1.5e6, seed=4)
+    assert a.shape == (24 * 14,)
+    assert np.array_equal(a, b)                    # seeded, reproducible
+    assert not np.array_equal(a, c)
+    assert np.all(a >= 0) and np.all(a == np.floor(a))   # request counts
+    # total volume tracks requests_per_day x days (Poisson + rare bursts)
+    assert a.sum() == pytest.approx(1.5e6 * 14, rel=0.1)
+
+
+def test_expected_rate_peaks_at_peak_hour_and_dips_on_weekends():
+    rate = expected_request_rate(24 * 7, 1e6, peak_hour=14, weekly=0.15)
+    day = rate[:24]
+    assert int(np.argmax(day)) == 14
+    weekday, weekend = rate[:24 * 5].mean(), rate[24 * 5:].mean()
+    assert weekend < weekday
+
+
+# --- credit ledger bound -----------------------------------------------------
+
+
+def _check_ledger_bounded(qualities, gain: float, target: float):
+    ledger = CreditLedger(gain=gain)
+    for q in qualities:
+        b = ledger.update(q, target)
+        assert -1.0 <= b <= 1.0
+        assert ledger.spend_headroom() == pytest.approx((b + 1) / 2)
+        assert ledger.repay_headroom() == pytest.approx((1 - b) / 2)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(min_value=0.0, max_value=1.0), min_size=1,
+                max_size=200),
+       st.floats(min_value=0.01, max_value=5.0),
+       st.floats(min_value=0.1, max_value=1.0))
+def test_ledger_bounded_property(qualities, gain, target):
+    _check_ledger_bounded(qualities, gain, target)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_ledger_bounded_fixed(seed):
+    rng = np.random.default_rng(seed)
+    _check_ledger_bounded(rng.uniform(0.0, 1.0, 500), gain=2.0, target=0.98)
+
+
+def test_ledger_saturates_and_recovers():
+    ledger = CreditLedger(gain=1.0)
+    for _ in range(10):
+        ledger.update(0.0, 1.0)                    # pure debt
+    assert ledger.balance == -1.0
+    ledger.update(1.0, 0.0)                        # one full repayment step
+    assert ledger.balance == 0.0
+
+
+# --- engine parity + conservation --------------------------------------------
+
+
+def _tiny_case(policy_name: str, seed: int = 3, forecast=None,
+               hours: int = WEEK * 2) -> ServeCase:
+    cfg = ServingConfig(**TINY)
+    trace = np.random.default_rng(seed).uniform(30.0, 700.0, hours + 24)
+    return ServeCase(
+        demand=generate_request_demand(hours, cfg.requests_per_day,
+                                       seed=seed + 1),
+        rate=expected_request_rate(hours + 24, cfg.requests_per_day),
+        ci=CarbonService(trace=trace, model=forecast),
+        config=cfg, policy=SERVE_POLICIES[policy_name](), t0=0,
+        label=policy_name)
+
+
+@pytest.mark.parametrize("noisy", [False, True], ids=["perfect", "noisy"])
+@pytest.mark.parametrize("policy", list(SERVE_POLICIES))
+def test_vector_scalar_parity(policy, noisy):
+    fc = NoisyForecast(sigma=0.3, seed=5) if noisy else None
+    rs = simulate_serving(_tiny_case(policy, forecast=fc), engine="scalar")
+    rv = simulate_serving(_tiny_case(policy, forecast=fc), engine="vector")
+    assert rs.carbon_g == rv.carbon_g
+    assert rs.energy_kwh == rv.energy_kwh
+    assert rs.serving.tier_requests == rv.serving.tier_requests
+    for field in ("balance", "utilization", "quality", "violation_frac"):
+        a, b = getattr(rs.serving, field), getattr(rv.serving, field)
+        assert np.array_equal(a, b), f"{policy}: {field} diverged"
+
+
+@pytest.mark.parametrize("policy", list(SERVE_POLICIES))
+def test_every_request_lands_on_exactly_one_tier(policy):
+    case = _tiny_case(policy)
+    res = simulate_serving(case)
+    assert sum(res.serving.tier_requests) == \
+        pytest.approx(float(case.demand.sum()), rel=1e-9)
+    assert res.serving.requests == float(case.demand.sum())
+    assert -1.0 <= res.serving.ledger_min <= res.serving.ledger_max <= 1.0
+
+
+def test_engine_rejects_bad_split_and_short_trace():
+    class BadPolicy:
+        name = "bad"
+
+        def on_window_start(self, w):
+            self.n = len(w.tiers)
+
+        def decide(self, t, demand, balance, cum_carbon_g, cum_requests):
+            return np.full(self.n, 0.9)            # sums to 2.7
+
+    case = _tiny_case("serve-static", hours=48)
+    case = dataclasses.replace(case, policy=BadPolicy())
+    with pytest.raises(ValueError, match="invalid tier split"):
+        simulate_serving(case)
+    with pytest.raises(ValueError, match="CI trace too short"):
+        ServeCase(demand=np.ones(10_000), rate=np.ones(10_024),
+                  ci=CarbonService(trace=np.full(100, 300.0)),
+                  config=ServingConfig(), policy=ServeStaticPolicy())
+    with pytest.raises(ValueError, match="unknown serving engine"):
+        simulate_serving(_tiny_case("serve-static", hours=48), engine="jax")
+
+
+# --- the quality-for-carbon trade --------------------------------------------
+
+
+def test_serve_flex_saves_carbon_at_bounded_violation_rate():
+    res = run(Scenario(serving=ServingConfig(**TINY), learn_weeks=1,
+                       eval_weeks=2, seed=7))
+    assert res.policies == DEFAULT_SERVE_POLICIES
+    static_viol = res.violation_rate("serve-static")
+    for pol in ("serve-greedy", "serve-flex"):
+        assert res.savings(pol) > 10.0
+        # relieving into higher-capacity tiers must not *add* violations
+        assert res.violation_rate(pol) <= static_viol + 1e-9
+        assert res.violation_rate(pol) < 0.02
+        # quality stays in a tight band around the target
+        assert 0.95 < res.quality_mean(pol) < 1.0
+    assert res.savings("serve-flex") >= res.savings("serve-greedy") - 1.0
+    m = res.metrics()
+    assert "quality_mean" in m["serve-flex"]
+    assert "ledger_final" in m["serve-flex"]
+
+
+# --- experiment threading ----------------------------------------------------
+
+
+def test_scenario_serving_round_trip_and_materialize():
+    sc = Scenario(serving=ServingConfig(requests_per_day=3e5, servers=16),
+                  learn_weeks=1, eval_weeks=1, seed=5)
+    assert sc.is_serving
+    rt = Scenario.from_dict(json.loads(json.dumps(sc.to_dict())))
+    assert rt == sc
+    mat = sc.materialize()
+    span = (sc.learn_weeks + sc.eval_weeks) * WEEK
+    assert mat.serving.demand.shape == (span,)
+    assert mat.serving.rate.shape == (span + 24,)   # look-ahead margin
+    assert mat.jobs == [] and mat.eval_jobs == []
+
+
+def test_scenario_rejects_serving_combinations():
+    serving = ServingConfig(**TINY)
+    with pytest.raises(ValueError, match="serving"):
+        Scenario(serving=serving, dag=DagConfig())
+    with pytest.raises(ValueError, match="single-region"):
+        Scenario(serving=serving, regions=("california", "ontario"))
+    with pytest.raises(ValueError, match="ci_outage"):
+        Scenario(serving=serving, faults=IidFaults(failure_rate=0.01))
+
+
+def test_policy_family_and_scenario_kind_must_match():
+    with pytest.raises(ValueError, match="serving workload"):
+        run(Scenario(), ["serve-flex"])
+    with pytest.raises(ValueError, match="serve policy family"):
+        run(Scenario(serving=ServingConfig(**TINY)), ["carbon-agnostic"])
+
+
+def test_serving_sweep_rejects_fault_axis():
+    sw = Sweep(base=Scenario(serving=ServingConfig(**TINY), learn_weeks=1,
+                             eval_weeks=1),
+               policies=DEFAULT_SERVE_POLICIES,
+               faults=[IidFaults(failure_rate=0.01)])
+    with pytest.raises(ValueError, match="no fault axis"):
+        sw.run()
+
+
+def test_serving_sweep_acceptance_scale_and_csv():
+    """The ISSUE-7 acceptance cell: >= 1M requests/day over a 2-week
+    window inside one sweep, in seconds not minutes."""
+    sw = Sweep(base=Scenario(serving=ServingConfig(requests_per_day=1.5e6),
+                             learn_weeks=1, eval_weeks=2, seed=7),
+               seeds=[1, 2], policies=DEFAULT_SERVE_POLICIES)
+    t = time.perf_counter()
+    res = sw.run()
+    elapsed = time.perf_counter() - t
+    assert elapsed < 20.0, f"serving sweep took {elapsed:.1f}s"
+    assert res.baseline == "serve-static"
+    rows = res.rows()
+    assert len(rows) == 2 * 3
+    for r in rows:
+        assert r["serving"]["requests"] >= 1e6 * 14
+        assert -1.0 <= r["serving"]["ledger_min"] <= 1.0
+    flex = [r for r in rows if r["policy"] == "serve-flex"]
+    assert all(r["savings_pct"] > 10.0 for r in flex)
+    # CSV export flattens the serving dict to dotted columns
+    csv_text = res.to_csv()
+    header = csv_text.splitlines()[0].split(",")
+    assert "serving.violation_rate" in header
+    assert "serving.tier_requests" in header
+    assert len(csv_text.splitlines()) == len(rows) + 1
+
+
+def test_serving_sweep_forecast_axis():
+    sw = Sweep(base=Scenario(serving=ServingConfig(**TINY), learn_weeks=1,
+                             eval_weeks=1, seed=7),
+               policies=DEFAULT_SERVE_POLICIES,
+               forecasts=[None, NoisyForecast(sigma=0.3, seed=5)])
+    rows = sw.run().rows()
+    assert {r["forecast"] for r in rows} == {"perfect", "noisy(s=0.3)"}
+    # the noisy forecast changes what serve-flex sees, hence what it emits
+    flex = {r["forecast"]: r["carbon_g"] for r in rows
+            if r["policy"] == "serve-flex"}
+    assert flex["perfect"] != flex["noisy(s=0.3)"]
+    static = {r["forecast"]: r["carbon_g"] for r in rows
+              if r["policy"] == "serve-static"}
+    assert static["perfect"] == static["noisy(s=0.3)"]   # forecast-blind
