@@ -23,7 +23,13 @@ perf trajectory is tracked across PRs:
                       counters): scalar vs vector per DAG policy, plus the
                       gating overhead of the vector path against the
                       independent-job vector path at equal task count
-                      (acceptance: within 2x).
+                      (acceptance: within 2x);
+- ``scan``          — the scan-fused engine (jitted lax.scan slot loop):
+                      scalar vs vector vs scan on the geo-flex and
+                      dag-carbon headline workloads (three-way parity
+                      asserted; the run fails if scan falls below
+                      vector), plus a >=512-cell vmapped sweep through
+                      ``simulate_many``.
 
 ``--smoke`` shrinks every section to a seconds-scale configuration (CI
 runs it so the benchmark code cannot silently rot) and skips the
@@ -317,6 +323,79 @@ def bench_dag(full: bool = False, smoke: bool = False) -> dict:
     return out
 
 
+def bench_scan(full: bool = False, smoke: bool = False) -> dict:
+    """Scan-fused engine (ISSUE-8): the jitted lax.scan slot loop against
+    the scalar and vector paths on the two workloads whose vector-path
+    speedup had collapsed — a geo-flex week (region-axis walk) and a
+    dag-carbon week (dependency gating) — plus a >=512-cell vmapped sweep
+    through ``simulate_many``.  Parity is asserted across all three
+    engines while timing; ``run_and_report`` fails the run if the scan
+    path regresses below the vector path on either headline workload."""
+    from repro.core.dag import DagCarbonPolicy
+    from repro.experiment import make_policy, prepare_context
+    from repro.traces import DagConfig
+
+    cap = 150 if full else 16 if smoke else 60
+    out = {}
+
+    geo_sc = Scenario(regions=("south-australia", "california"),
+                      capacity=cap, learn_weeks=1, seed=7)
+    geo = geo_sc.materialize()
+    ctx = prepare_context(geo, ("geo-flex",))
+    mk_geo = lambda: make_policy("geo-flex", ctx)  # noqa: E731
+    dag = Scenario(dag=DagConfig(), capacity=cap, learn_weeks=1,
+                   seed=7).materialize()
+    for name, mat, mk in [("geo-flex", geo, mk_geo),
+                          ("dag-carbon", dag, DagCarbonPolicy)]:
+        ci_c = mat.mci if mat.is_geo else mat.ci
+        cl_c = mat.geo if mat.is_geo else mat.cluster
+        for eng in ("vector", "scan"):          # warm pack + jit caches
+            simulate(mat.eval_jobs, ci_c, cl_c, mk(), t0=mat.t0,
+                     horizon=WEEK, engine=eng)
+        times, results = {}, {}
+        for eng, reps in (("scalar", 1), ("vector", 3), ("scan", 3)):
+            times[eng], results[eng] = _timed(
+                lambda m=mk, e=eng: simulate(mat.eval_jobs, ci_c, cl_c,
+                                             m(), t0=mat.t0, horizon=WEEK,
+                                             engine=e), repeats=reps)
+        assert results["scalar"].carbon_g == results["vector"].carbon_g \
+            == results["scan"].carbon_g      # three-way parity while timing
+        out[name] = {
+            "scalar_s": round(times["scalar"], 3),
+            "vector_s": round(times["vector"], 4),
+            "scan_s": round(times["scan"], 4),
+            "speedup_vs_scalar": round(times["scalar"] / times["scan"], 1),
+            "speedup_vs_vector": round(times["vector"] / times["scan"], 2),
+            "jobs": len(mat.eval_jobs),
+        }
+
+    # >=512-cell grid as one batched dispatch: structurally identical
+    # cases fuse into vmapped device tiles (8 traces x 16 seeds x 4
+    # policies); smoke shrinks the grid, recorded runs keep 512
+    regions = ("south-australia", "california", "germany", "texas",
+               "ontario", "sweden", "poland", "virginia")
+    n_seeds = 2 if smoke else 16
+    single = Scenario(region="south-australia", capacity=cap,
+                      learn_weeks=1, seed=7).materialize()
+    mks = [baselines.CarbonAgnosticPolicy, baselines.WaitAwhilePolicy,
+           baselines.RobustWaitAwhilePolicy,
+           lambda: baselines.WaitAwhilePolicy(percentile=35.0)]
+    cases = [SimCase(jobs=single.eval_jobs,
+                     ci=type(single.ci).synthetic(r, WEEK * 2 + 24 * 30,
+                                                  seed=s),
+                     cluster=single.cluster, policy=mk(), t0=0,
+                     horizon=WEEK, engine="scan",
+                     label=f"{r}/s{s}/{i}")
+             for r in regions for s in range(n_seeds)
+             for i, mk in enumerate(mks)]
+    simulate_many(cases[:len(mks)])              # warm the batch jit
+    t_sweep, rs = _timed(lambda: simulate_many(cases))
+    assert all((r.completion >= 0).all() for r in rs)
+    out["sweep"] = {"cells": len(cases), "wall_s": round(t_sweep, 2),
+                    "cells_per_s": round(len(cases) / t_sweep, 1)}
+    return out
+
+
 def run_all(full: bool = False, smoke: bool = False) -> dict:
     cluster, ci, hist, ev, t0, offsets = _scenario(full, smoke)
     res = {
@@ -330,6 +409,7 @@ def run_all(full: bool = False, smoke: bool = False) -> dict:
                                                  offsets),
         "geo": bench_geo(full, smoke),
         "dag": bench_dag(full, smoke),
+        "scan": bench_scan(full, smoke),
     }
     return res
 
@@ -363,6 +443,14 @@ def csv_rows(res: dict) -> list[str]:
                 f"{res['dag']['independent_vector_s'] * 1e6:.0f},"
                 f"overhead_per_slot={res['dag']['gating_overhead_x']}x"
                 f";tasks={res['dag']['tasks']}")
+    for wl in ("geo-flex", "dag-carbon"):
+        d = res["scan"][wl]
+        rows.append(f"bench_engine/scan/{wl},{d['scan_s'] * 1e6:.0f},"
+                    f"vs_scalar={d['speedup_vs_scalar']}x"
+                    f";vs_vector={d['speedup_vs_vector']}x")
+    sw = res["scan"]["sweep"]
+    rows.append(f"bench_engine/scan/sweep,{sw['wall_s'] * 1e6:.0f},"
+                f"cells={sw['cells']};cells_per_s={sw['cells_per_s']}")
     return rows
 
 
@@ -374,6 +462,11 @@ def run_and_report(out_path: str | None = None, full: bool = False,
     over = res["dag"]["gating_overhead_x"]
     assert over < 2.0, (
         f"DAG gating overhead {over}x exceeds the 2x acceptance bound")
+    for wl in ("geo-flex", "dag-carbon"):
+        d = res["scan"][wl]
+        assert d["scan_s"] <= d["vector_s"], (
+            f"scan engine regressed below the vector path on {wl}: "
+            f"scan {d['scan_s']}s vs vector {d['vector_s']}s")
     if smoke and out_path is None:
         print("smoke run: BENCH_engine.json left untouched")
         return res

@@ -63,6 +63,11 @@ def _elastic_fill(active: list[ActiveJob], alloc: dict[int, int], m_t: int,
 class CarbonAgnosticPolicy:
     """Status quo: FCFS, no elasticity, run immediately, full capacity."""
 
+    # decide_packed is compliant by construction (k in {0, k_min}, active
+    # rows only, fill capped at the m_t it returns) -> the vector engine
+    # skips its per-slot defensive re-validation (see _simulate_vector)
+    packed_safe = True
+
     name: str = "carbon-agnostic"
 
     def on_window_start(self, ci, t0, horizon, jobs, cluster) -> None:

@@ -92,18 +92,32 @@ class GeoStaticPolicy:
 @dataclasses.dataclass
 class GeoGreedyPolicy:
     """Admit each job to the currently cleanest region with free base
-    capacity (ties -> lowest region index); the placement is sticky — no
-    migration — so all carbon awareness is spent at admission time."""
+    capacity (ties -> lowest region index), and migrate started jobs when
+    the *instantaneous* CI gap pays for the move.
 
+    Greedy means myopic, not immobile: every decision — placement and
+    migration alike — reads only the current CI vector, never the
+    forecast (that is geo-flex's edge).  The original sticky-placement
+    variant reported ``migrations: 0`` in BENCH_engine.json §geo not
+    because migration was never profitable (geo-flex found 171 moves on
+    the same trace) but because the policy had no migration rule at all;
+    the myopic rule below closes that gap while preserving the
+    greedy/flex contrast, and is pinned by a two-region large-CI-gap
+    regression test (tests/test_geo.py)."""
+
+    saving_margin: float = 0.25        # relative saving required to move
+    max_migrations_per_job: int = 1    # ping-pong guard
     name: str = "geo-greedy"
 
     def on_window_start(self, mci, t0, horizon, jobs, geo) -> None:
         self._placed: dict[int, int] = {}
+        self._moves: dict[int, int] = {}
 
     def decide_geo(self, t, active, mci, geo):
         m_vec = geo.capacity_vec()
         used = np.zeros(geo.n_regions, dtype=np.int64)
-        clean_order = np.argsort(mci.ci_vec(t), kind="stable")
+        ci_now = mci.ci_vec(t)
+        clean_order = np.argsort(ci_now, kind="stable")
         alloc: dict[int, tuple[int, int]] = {}
         for a in _fcfs_order(active):
             jid, k = a.job.job_id, a.job.k_min
@@ -117,13 +131,45 @@ class GeoGreedyPolicy:
                         continue          # nothing free: retry next slot
                     self._placed[jid] = r
             r = self._placed[jid]
+            if a.started:
+                dest = self._migration_target(a, r, ci_now, geo)
+                if dest is not None:
+                    alloc[jid] = (dest, k)        # engine starts the move
+                    self._placed[jid] = dest
+                    self._moves[jid] = self._moves.get(jid, 0) + 1
+                    continue
             if used[r] + k <= m_vec[r]:
                 alloc[jid] = (r, k)
                 used[r] += k
         return m_vec, alloc
 
+    def _migration_target(self, a, r: int, ci_now: np.ndarray,
+                          geo: GeoCluster) -> int | None:
+        """Destination iff moving beats staying *at current CI* by the
+        margin — the forecast-free analogue of geo-flex's rule, with the
+        same slack/remaining guards against unfinishable moves."""
+        if self._moves.get(a.job.job_id, 0) >= self.max_migrations_per_job:
+            return None
+        mig_slots = geo.migration.slots(a.job)
+        if a.slack_left <= mig_slots + 1 or a.remaining <= mig_slots:
+            return None
+        h = int(max(1, np.ceil(a.remaining)))
+        power = a.job.power if a.job.power > 0 else geo.power_per_server
+        e_run = a.job.k_min * power * geo.slot_hours * h
+        stay = float(ci_now[r]) * e_run
+        mig_carbon = np.array([geo.migration.carbon_g(a.job, c)
+                               for c in ci_now])
+        move = ci_now * e_run + mig_carbon
+        move[r] = np.inf
+        best = int(np.argmin(move))
+        if move[best] < stay * (1.0 - self.saving_margin):
+            return best
+        return None
+
     def on_completion(self, t, job, violated) -> None:
-        self._placed.pop(job.job.job_id, None)
+        jid = job.job.job_id
+        self._placed.pop(jid, None)
+        self._moves.pop(jid, None)
 
 
 @dataclasses.dataclass

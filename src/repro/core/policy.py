@@ -154,6 +154,11 @@ class CarbonFlexPolicy:
     the KNN state.  Under a perfect forecast the band collapses onto the
     truth and the robust variant is bit-identical to plain carbonflex."""
 
+    # decide_packed allocates only live active rows, scales from the entry
+    # blocks' [k_min, k_max] tables, fill capped at the m_t it returns ->
+    # the vector engine skips per-slot re-validation (see _simulate_vector)
+    packed_safe = True
+
     kb: KnowledgeBase
     cfg: ProvisioningConfig = dataclasses.field(default_factory=ProvisioningConfig)
     violation_window: int = 24          # completions remembered for v

@@ -275,7 +275,8 @@ def run(
         cluster_w = mat.geo if mat.is_geo else mat.cluster
         cases = [SimCase(jobs=ev, ci=ci_w, cluster=cluster_w,
                          policy=instances[n], t0=t0, horizon=WEEK,
-                         faults=_fresh_faults(scenario), label=n)
+                         faults=_fresh_faults(scenario), label=n,
+                         engine=scenario.engine)
                  for n in names]
         for n, res in zip(names, simulate_many(cases)):
             weekly[n].append(res)

@@ -146,6 +146,13 @@ class Scenario:
     # `ci_outage` (the policies read the same degraded CI views) but not
     # with `dag`, `regions`, or `faults`.
     serving: ServingConfig | None = None
+    # Simulation engine every batch case of this scenario runs on:
+    # "vector" (default), "scalar" (reference loop), or "scan" (jitted
+    # lax.scan slot loop, core/scan_engine.py).  All three are bit-
+    # identical; "scan" additionally fuses structurally identical cases
+    # of a sweep into one vmapped device program.  Ignored by serving
+    # scenarios (the serving engine has a single implementation).
+    engine: str = "vector"
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "regions", tuple(self.regions))
@@ -165,6 +172,9 @@ class Scenario:
                              "either `dag` or `regions`")
         if self.learn_weeks < 1 or self.eval_weeks < 1:
             raise ValueError("learn_weeks and eval_weeks must be >= 1")
+        if self.engine not in ("scalar", "vector", "scan"):
+            raise ValueError(f"unknown engine {self.engine!r}; choose "
+                             "'scalar', 'vector', or 'scan'")
         if self.serving is not None:
             if self.dag is not None:
                 raise ValueError(

@@ -43,7 +43,10 @@ class Sweep:
     forecast); rows then carry a ``"forecast"`` label and savings compare
     within the same forecast model.  ``baseline`` names the policy
     savings are measured against — it is added to the run automatically
-    if missing.
+    if missing.  The base scenario's ``engine`` selects the simulation
+    engine for every cell (``engine="scan"`` additionally fuses
+    structurally identical cells into vmapped device programs — the
+    fastest way to run large grids).
 
     Geo sweeps: when the base scenario carries a ``regions`` tuple the
     whole grid is geo-distributed — the sweep's own single-region
@@ -167,6 +170,7 @@ class Sweep:
                         jobs=mat.eval_jobs, ci=ci_c, cluster=cluster_c,
                         policy=make_policy(name, ctx), t0=mat.t0,
                         horizon=horizon, faults=_fresh_faults(scf),
+                        engine=sc.engine,
                         label=f"{region_label}/s{sc.seed}/{fault_label(fm)}/{name}"
                               + (f"/{fc_label}" if with_forecast else "")))
                     row = {"region": region_label, "seed": sc.seed,

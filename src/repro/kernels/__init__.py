@@ -1,1 +1,1 @@
-from . import flash_attention, knn, ops, ref, score  # noqa: F401
+from . import flash_attention, gating, knn, ops, ref, score  # noqa: F401

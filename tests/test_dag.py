@@ -153,7 +153,7 @@ def _mk_job(jid, length, deps=(), arrival=0, delay=6):
                delay=delay, profile=np.ones(1), deps=deps)
 
 
-@pytest.mark.parametrize("engine", ["scalar", "vector"])
+@pytest.mark.parametrize("engine", ["scalar", "vector", "scan"])
 class TestGatingSemantics:
     def test_chain_serialises(self, engine):
         cluster = ClusterConfig.default(8)
@@ -241,11 +241,12 @@ def test_gated_rows_never_run_even_if_policy_allocates_them():
             _mk_job(2, 1.0, deps=(1,))]
     rs = simulate(jobs, ci, cluster, _EvilPackedPolicy(), horizon=48,
                   engine="scalar")
-    rv = simulate(jobs, ci, cluster, _EvilPackedPolicy(), horizon=48,
-                  engine="vector")
     np.testing.assert_array_equal(rs.completion, [2, 4, 5])
-    np.testing.assert_array_equal(rv.completion, [2, 4, 5])
-    assert rs.carbon_g == rv.carbon_g
+    for engine in ("vector", "scan"):   # scan delegates unknown policies
+        rv = simulate(jobs, ci, cluster, _EvilPackedPolicy(), horizon=48,
+                      engine=engine)
+        np.testing.assert_array_equal(rv.completion, [2, 4, 5])
+        assert rs.carbon_g == rv.carbon_g, engine
 
 
 def test_geo_engines_reject_dag_jobs():
@@ -254,7 +255,7 @@ def test_geo_engines_reject_dag_jobs():
         ("south-australia", "california"), 24 * 10, seed=1)
     from repro.core import GeoStaticPolicy
     jobs = [_mk_job(0, 1.0), _mk_job(1, 1.0, deps=(0,))]
-    for engine in ("scalar", "vector"):
+    for engine in ("scalar", "vector", "scan"):
         with pytest.raises(ValueError, match="geo"):
             simulate(jobs, mci, geo, GeoStaticPolicy(), horizon=24,
                      engine=engine)
@@ -306,11 +307,13 @@ def _check_dag_parity(seed: int, policy_name: str, fault_seed: int | None):
                             seed=fault_seed))
     rs = simulate(jobs, ci, cluster, mk(), horizon=96, engine="scalar",
                   faults=mk_faults())
-    rv = simulate(jobs, ci, cluster, mk(), horizon=96, engine="vector",
-                  faults=mk_faults())
-    ctx = f"seed={seed} policy={policy_name} faults={fault_seed}"
-    _assert_identical(rs, rv, ctx)
-    _assert_precedence_invariant(rv, jobs, ctx)
+    for engine in ("vector", "scan"):
+        rv = simulate(jobs, ci, cluster, mk(), horizon=96, engine=engine,
+                      faults=mk_faults())
+        ctx = f"seed={seed} policy={policy_name} faults={fault_seed} " \
+              f"engine={engine}"
+        _assert_identical(rs, rv, ctx)
+        _assert_precedence_invariant(rv, jobs, ctx)
 
 
 @pytest.mark.parametrize("policy_name", sorted(_MK))

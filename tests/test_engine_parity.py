@@ -1,10 +1,12 @@
-"""Vector engine vs scalar reference: bit-for-bit output parity.
+"""Vector and scan engines vs scalar reference: bit-for-bit parity.
 
 The vectorised engine (struct-of-arrays accounting, packed policy fast
-paths, batched fault draws) must reproduce the scalar reference engine's
-``SimResult`` exactly — same ``carbon_g``/``energy_kwh`` floats, same
-completion/violation/wait arrays, same per-slot logs — on seeded
-scenarios, for every policy, with and without fault injection."""
+paths, batched fault draws) and the jitted scan engine (device slot loop
+with vector-engine delegation for non-native cases) must reproduce the
+scalar reference engine's ``SimResult`` exactly — same
+``carbon_g``/``energy_kwh`` floats, same completion/violation/wait
+arrays, same per-slot logs — on seeded scenarios, for every policy, with
+and without fault injection."""
 import dataclasses
 
 import numpy as np
@@ -73,9 +75,11 @@ def test_engines_identical_per_policy(world, policy_name):
     cluster, ci, hist, ev, kb = world
     mk = _mk_policies(kb, hist)[policy_name]
     rs = simulate(ev, ci, cluster, mk(), t0=WEEK, horizon=WEEK, engine="scalar")
-    rv = simulate(ev, ci, cluster, mk(), t0=WEEK, horizon=WEEK, engine="vector")
-    assert_results_identical(rs, rv, policy_name)
-    assert (rv.completion >= 0).all()
+    for engine in ("vector", "scan"):
+        rv = simulate(ev, ci, cluster, mk(), t0=WEEK, horizon=WEEK,
+                      engine=engine)
+        assert_results_identical(rs, rv, f"{policy_name}/{engine}")
+        assert (rv.completion >= 0).all()
 
 
 @pytest.mark.parametrize("policy_name", ["carbon-agnostic", "carbonflex",
@@ -88,9 +92,10 @@ def test_engines_identical_under_faults(world, policy_name, fault_seed):
                                    seed=fault_seed)
     rs = simulate(ev, ci, cluster, mk(), t0=WEEK, horizon=WEEK,
                   engine="scalar", faults=mk_faults())
-    rv = simulate(ev, ci, cluster, mk(), t0=WEEK, horizon=WEEK,
-                  engine="vector", faults=mk_faults())
-    assert_results_identical(rs, rv, f"{policy_name}+faults")
+    for engine in ("vector", "scan"):   # scan delegates faulted cases
+        rv = simulate(ev, ci, cluster, mk(), t0=WEEK, horizon=WEEK,
+                      engine=engine, faults=mk_faults())
+        assert_results_identical(rs, rv, f"{policy_name}+faults/{engine}")
 
 
 FORECASTS = {"noisy": NoisyForecast(sigma=0.3, seed=5),
@@ -119,10 +124,11 @@ def test_engines_identical_under_noisy_forecasts(world, policy_name,
                                     seed=3)) if faulty else (lambda: None)
     rs = simulate(ev, ci_f, cluster, mk(), t0=WEEK, horizon=WEEK,
                   engine="scalar", faults=mk_faults())
-    rv = simulate(ev, ci_f, cluster, mk(), t0=WEEK, horizon=WEEK,
-                  engine="vector", faults=mk_faults())
-    assert_results_identical(rs, rv, f"{policy_name}+{forecast}")
-    assert (rv.completion >= 0).all()
+    for engine in ("vector", "scan"):
+        rv = simulate(ev, ci_f, cluster, mk(), t0=WEEK, horizon=WEEK,
+                      engine=engine, faults=mk_faults())
+        assert_results_identical(rs, rv, f"{policy_name}+{forecast}/{engine}")
+        assert (rv.completion >= 0).all()
 
 
 def test_fault_batch_draws_match_sequential_stream():
@@ -147,10 +153,11 @@ def test_zero_length_job_edge():
     ]
     rs = simulate(jobs, ci, cluster, baselines.CarbonAgnosticPolicy(),
                   horizon=24, engine="scalar")
-    rv = simulate(jobs, ci, cluster, baselines.CarbonAgnosticPolicy(),
-                  horizon=24, engine="vector")
-    assert_results_identical(rs, rv, "zero-length")
-    assert rv.completion[0] == 0 and rv.wait_slots[0] == 0
+    for engine in ("vector", "scan"):
+        rv = simulate(jobs, ci, cluster, baselines.CarbonAgnosticPolicy(),
+                      horizon=24, engine=engine)
+        assert_results_identical(rs, rv, f"zero-length/{engine}")
+        assert rv.completion[0] == 0 and rv.wait_slots[0] == 0
 
 
 def test_simulate_many_matches_individual_runs(world):

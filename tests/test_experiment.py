@@ -208,6 +208,38 @@ class TestSweep:
         assert restored.to_json() == payload
         assert restored.summary()["carbonflex"]["n_cases"] == 4
 
+    def test_to_csv_header_is_union_over_mixed_row_shapes(self):
+        """ISSUE-8 satellite: heterogeneous sweeps (fault axes where only
+        some rows carry resilience metrics, serving rows with nested
+        dicts, columns that first appear mid-list) must export as one
+        rectangular CSV — header = first-seen-order union of every row's
+        flattened keys, missing cells empty."""
+        import csv
+        import io
+
+        rows = [
+            {"region": "ontario", "seed": 1, "policy": "a", "carbon_g": 10.0},
+            {"region": "ontario", "seed": 1, "policy": "b", "carbon_g": 9.0,
+             "resilience": {"evictions": 3, "lost_work_slots": 1.5}},
+            {"region": "texas", "seed": 2, "policy": "a", "carbon_g": 8.0,
+             "forecast": "noisy", "tiers": ["full", "half"]},
+        ]
+        csv_text = SweepResult(baseline="a", rows_=rows).to_csv()
+        lines = csv_text.splitlines()
+        assert lines[0].split(",") == [
+            "region", "seed", "policy", "carbon_g",
+            "resilience.evictions", "resilience.lost_work_slots",
+            "forecast", "tiers"]
+        parsed = list(csv.DictReader(io.StringIO(csv_text)))
+        assert len(parsed) == 3
+        # rows missing a column get empty cells, not dropped columns
+        assert parsed[0]["resilience.evictions"] == ""
+        assert parsed[1]["resilience.evictions"] == "3"
+        assert parsed[0]["forecast"] == "" and parsed[2]["forecast"] == "noisy"
+        # list values join with | so the table stays one value per cell
+        assert parsed[2]["tiers"] == "full|half"
+        assert all(len(line.split(",")) == 8 for line in lines)
+
     def test_base_scenario_faults_inherited(self):
         base = Scenario(capacity=8, learn_weeks=1, family="alibaba", seed=51)
         faulty = Scenario(capacity=8, learn_weeks=1, family="alibaba", seed=51,

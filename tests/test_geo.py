@@ -64,10 +64,11 @@ def test_geo_engines_identical_per_policy(world, policy_name):
     geo, mci, jobs = world
     mk = _MK[policy_name]
     rs = simulate(jobs, mci, geo, mk(), horizon=WEEK, engine="scalar")
-    rv = simulate(jobs, mci, geo, mk(), horizon=WEEK, engine="vector")
-    assert_geo_results_identical(rs, rv, policy_name)
-    assert (rv.completion >= 0).all()
-    assert set(rv.final_region.tolist()) <= set(range(geo.n_regions))
+    for engine in ("vector", "scan"):
+        rv = simulate(jobs, mci, geo, mk(), horizon=WEEK, engine=engine)
+        assert_geo_results_identical(rs, rv, f"{policy_name}/{engine}")
+        assert (rv.completion >= 0).all()
+        assert set(rv.final_region.tolist()) <= set(range(geo.n_regions))
 
 
 @pytest.mark.parametrize("policy_name", sorted(_MK))
@@ -79,9 +80,11 @@ def test_geo_engines_identical_under_faults(world, policy_name, fault_seed):
                                    seed=fault_seed)
     rs = simulate(jobs, mci, geo, mk(), horizon=WEEK, engine="scalar",
                   faults=mk_faults())
-    rv = simulate(jobs, mci, geo, mk(), horizon=WEEK, engine="vector",
-                  faults=mk_faults())
-    assert_geo_results_identical(rs, rv, f"{policy_name}+faults")
+    for engine in ("vector", "scan"):   # scan delegates faulted cases
+        rv = simulate(jobs, mci, geo, mk(), horizon=WEEK, engine=engine,
+                      faults=mk_faults())
+        assert_geo_results_identical(rs, rv,
+                                     f"{policy_name}+faults/{engine}")
 
 
 @pytest.mark.parametrize("policy_name", sorted(_MK))
@@ -105,9 +108,11 @@ def test_geo_engines_identical_under_noisy_forecasts(world, policy_name,
                                     seed=3)) if faulty else (lambda: None)
     rs = simulate(jobs, mci_f, geo, mk(), horizon=WEEK, engine="scalar",
                   faults=mk_faults())
-    rv = simulate(jobs, mci_f, geo, mk(), horizon=WEEK, engine="vector",
-                  faults=mk_faults())
-    assert_geo_results_identical(rs, rv, f"{policy_name}+{forecast}")
+    for engine in ("vector", "scan"):
+        rv = simulate(jobs, mci_f, geo, mk(), horizon=WEEK, engine=engine,
+                      faults=mk_faults())
+        assert_geo_results_identical(rs, rv,
+                                     f"{policy_name}+{forecast}/{engine}")
 
 
 def test_simulate_many_dispatches_geo_cases(world):
@@ -160,7 +165,9 @@ def test_geo_static_pins_jobs_to_home_region(world):
 def test_geo_greedy_prefers_cleaner_regions(world):
     geo, mci, jobs = world
     r = simulate(jobs, mci, geo, GeoGreedyPolicy(), horizon=WEEK)
-    assert r.migrations == 0
+    # greedy now migrates on instantaneous-CI profit (ISSUE-8 satellite:
+    # the old sticky variant reported 0 moves by construction)
+    assert r.migrations > 0
     # mean CI per region orders ontario (clean) above south-australia;
     # greedy placement must send more work to the cleaner regions than
     # the static round-robin does
@@ -170,6 +177,36 @@ def test_geo_greedy_prefers_cleaner_regions(world):
     assert (r.final_region == cleanest).sum() \
         >= (static.final_region == cleanest).sum()
     assert r.carbon_g < static.carbon_g
+
+
+def test_geo_greedy_migrates_on_large_ci_gap():
+    """ISSUE-8 satellite regression: on a constructed two-region trace
+    whose CI ranking flips hard after the job starts, geo-greedy must
+    initiate a migration (the pre-fix sticky variant never could), in
+    every engine, with identical accounting."""
+    hours = 24 * 10
+    trace_a = np.full(hours, 1000.0)
+    trace_a[:2] = 1.0                  # clean at placement, filthy after
+    trace_b = np.full(hours, 5.0)
+    trace_b[:2] = 500.0                # dirty at placement, clean after
+    mci = MultiRegionCarbonService(
+        ("flip", "clean"),
+        (CarbonService(trace=trace_a), CarbonService(trace=trace_b)))
+    geo = GeoCluster(regions=("flip", "clean"), capacities=(4, 4),
+                     queues=ClusterConfig.default(8).queues,
+                     migration=MigrationModel())
+    job = Job(job_id=0, arrival=0, length=10.0, queue=2, delay=48,
+              profile=np.ones(1))
+    results = {e: simulate([job], mci, geo, GeoGreedyPolicy(), horizon=hours,
+                           engine=e) for e in ("scalar", "vector", "scan")}
+    for engine, r in results.items():
+        assert r.migrations == 1, engine
+        assert r.final_region[0] == 1, engine       # ended in the clean one
+        assert r.migration_carbon_g > 0, engine
+    assert_geo_results_identical(results["scalar"], results["vector"],
+                                 "greedy-gap scalar-vs-vector")
+    assert_geo_results_identical(results["scalar"], results["scan"],
+                                 "greedy-gap scalar-vs-scan")
 
 
 def test_geo_flex_beats_static_with_migration_costs_charged(world):

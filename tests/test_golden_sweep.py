@@ -99,6 +99,20 @@ def test_golden_dag_sweep_reproduces_fixture_exactly():
     assert got == want
 
 
+def test_golden_sweeps_byte_identical_with_scan_engine():
+    """ISSUE-8: ``engine="scan"`` is a pure implementation swap, so the
+    scan-engine run of the batch and DAG golden grids must reproduce the
+    checked-in JSON payloads byte-for-byte (rows carry no engine column;
+    any float drift in the fused device path fails here)."""
+    for path, mk in ((FIXTURE, golden_sweep), (FIXTURE_DAG, golden_dag_sweep)):
+        with open(path) as f:
+            want = f.read()
+        sw = mk()
+        sw = dataclasses.replace(
+            sw, base=dataclasses.replace(sw.base, engine="scan"))
+        assert sw.run().to_json() + "\n" == want, path
+
+
 def test_dag_fixture_shape_sanity():
     with open(FIXTURE_DAG) as f:
         want = json.load(f)

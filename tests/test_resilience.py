@@ -110,11 +110,13 @@ def test_parity_plain(world, fault_kind, seed):
                    baselines.WaitAwhilePolicy):
         rs = simulate(jobs, ci, cluster, policy(), horizon=WEEK,
                       engine="scalar", faults=mk(seed))
-        rv = simulate(jobs, ci, cluster, policy(), horizon=WEEK,
-                      engine="vector", faults=mk(seed))
-        assert_identical(rs, rv, f"{fault_kind}/s{seed}/{policy.__name__}")
-        assert rv.resilience is not None
-        assert rv.resilience.lost_work_slots >= 0.0
+        for engine in ("vector", "scan"):   # scan delegates faulted cases
+            rv = simulate(jobs, ci, cluster, policy(), horizon=WEEK,
+                          engine=engine, faults=mk(seed))
+            assert_identical(
+                rs, rv, f"{fault_kind}/s{seed}/{policy.__name__}/{engine}")
+            assert rv.resilience is not None
+            assert rv.resilience.lost_work_slots >= 0.0
 
 
 @pytest.mark.parametrize("fault_kind", FAULT_KINDS)
@@ -124,11 +126,13 @@ def test_parity_geo(geo_world, fault_kind, policy_cls):
     mk = _fault_grid()[fault_kind]
     rs = simulate(jobs, mci, geo, policy_cls(), horizon=WEEK,
                   engine="scalar", faults=mk(5))
-    rv = simulate(jobs, mci, geo, policy_cls(), horizon=WEEK,
-                  engine="vector", faults=mk(5))
-    assert_identical(rs, rv, f"geo/{fault_kind}/{policy_cls.__name__}")
-    np.testing.assert_array_equal(rs.final_region, rv.final_region)
-    np.testing.assert_array_equal(rs.region_carbon_g, rv.region_carbon_g)
+    for engine in ("vector", "scan"):
+        rv = simulate(jobs, mci, geo, policy_cls(), horizon=WEEK,
+                      engine=engine, faults=mk(5))
+        assert_identical(rs, rv,
+                         f"geo/{fault_kind}/{policy_cls.__name__}/{engine}")
+        np.testing.assert_array_equal(rs.final_region, rv.final_region)
+        np.testing.assert_array_equal(rs.region_carbon_g, rv.region_carbon_g)
 
 
 @pytest.mark.parametrize("fault_kind", FAULT_KINDS)
@@ -138,9 +142,11 @@ def test_parity_dag(dag_world, fault_kind, policy_cls):
     mk = _fault_grid()[fault_kind]
     rs = simulate(jobs, ci, cluster, policy_cls(), horizon=WEEK,
                   engine="scalar", faults=mk(5))
-    rv = simulate(jobs, ci, cluster, policy_cls(), horizon=WEEK,
-                  engine="vector", faults=mk(5))
-    assert_identical(rs, rv, f"dag/{fault_kind}/{policy_cls.__name__}")
+    for engine in ("vector", "scan"):
+        rv = simulate(jobs, ci, cluster, policy_cls(), horizon=WEEK,
+                      engine=engine, faults=mk(5))
+        assert_identical(rs, rv,
+                         f"dag/{fault_kind}/{policy_cls.__name__}/{engine}")
 
 
 # --- invariants --------------------------------------------------------------
