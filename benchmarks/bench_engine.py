@@ -60,6 +60,8 @@ from repro.core.knowledge import states_from_schedule
 from repro.core.simulator import SimCase, simulate_many
 from repro.experiment import Scenario
 
+from .common import bench_metadata
+
 WEEK = 24 * 7
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 
@@ -396,6 +398,46 @@ def bench_scan(full: bool = False, smoke: bool = False) -> dict:
     return out
 
 
+def bench_telemetry(full: bool = False, smoke: bool = False) -> dict:
+    """Trace-recording overhead on the scan path (ISSUE-9 acceptance:
+    attaching a MemoryRecorder must stay within 1.3x of the bare run,
+    and the recorded run must return the identical bytes).  The vector
+    path is timed alongside for context; the telemetry=None paths are
+    covered implicitly — every other section runs them untouched."""
+    from repro.telemetry import MemoryRecorder, Telemetry
+
+    cap = 150 if full else 16 if smoke else 60
+    mat = Scenario(region="south-australia", capacity=cap,
+                   learn_weeks=1, seed=7).materialize()
+    mk = baselines.WaitAwhilePolicy
+    out = {}
+    for eng in ("vector", "scan"):
+        simulate(mat.eval_jobs, mat.ci, mat.cluster, mk(), t0=mat.t0,
+                 horizon=WEEK, engine=eng)          # warm pack + jit
+        t_off, r_off = _timed(
+            lambda e=eng: simulate(mat.eval_jobs, mat.ci, mat.cluster,
+                                   mk(), t0=mat.t0, horizon=WEEK, engine=e),
+            repeats=5)
+
+        n_events = [0]
+
+        def run_on(e=eng):
+            tel = Telemetry(recorder=MemoryRecorder())
+            r = simulate(mat.eval_jobs, mat.ci, mat.cluster, mk(),
+                         t0=mat.t0, horizon=WEEK, engine=e, telemetry=tel)
+            n_events[0] = len(tel.recorder)
+            return r
+
+        t_on, r_on = _timed(run_on, repeats=5)
+        events = n_events[0]
+        assert r_off.carbon_g == r_on.carbon_g      # observation-only
+        out[eng] = {
+            "off_s": round(t_off, 4), "on_s": round(t_on, 4),
+            "overhead_x": round(t_on / t_off, 3), "events": events,
+        }
+    return out
+
+
 def run_all(full: bool = False, smoke: bool = False) -> dict:
     cluster, ci, hist, ev, t0, offsets = _scenario(full, smoke)
     res = {
@@ -410,6 +452,7 @@ def run_all(full: bool = False, smoke: bool = False) -> dict:
         "geo": bench_geo(full, smoke),
         "dag": bench_dag(full, smoke),
         "scan": bench_scan(full, smoke),
+        "telemetry": bench_telemetry(full, smoke),
     }
     return res
 
@@ -451,6 +494,9 @@ def csv_rows(res: dict) -> list[str]:
     sw = res["scan"]["sweep"]
     rows.append(f"bench_engine/scan/sweep,{sw['wall_s'] * 1e6:.0f},"
                 f"cells={sw['cells']};cells_per_s={sw['cells_per_s']}")
+    for eng, d in res["telemetry"].items():
+        rows.append(f"bench_engine/telemetry/{eng},{d['on_s'] * 1e6:.0f},"
+                    f"overhead={d['overhead_x']}x;events={d['events']}")
     return rows
 
 
@@ -467,6 +513,11 @@ def run_and_report(out_path: str | None = None, full: bool = False,
         assert d["scan_s"] <= d["vector_s"], (
             f"scan engine regressed below the vector path on {wl}: "
             f"scan {d['scan_s']}s vs vector {d['vector_s']}s")
+    tele_x = res["telemetry"]["scan"]["overhead_x"]
+    assert tele_x <= 1.3, (
+        f"scan-path trace recording costs {tele_x}x vs telemetry off; "
+        f"the acceptance bound is 1.3x")
+    res["_meta"] = bench_metadata()
     if smoke and out_path is None:
         print("smoke run: BENCH_engine.json left untouched")
         return res

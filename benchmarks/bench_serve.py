@@ -29,6 +29,8 @@ from repro.experiment import Scenario, ServingConfig, WEEK, prepare_context
 from repro.experiment.registry import make_policy
 from repro.serving import ServeCase, simulate_serving
 
+from .common import bench_metadata
+
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 POLICIES = ("serve-static", "serve-greedy", "serve-flex")
 
@@ -111,6 +113,7 @@ def run_and_report(out_path: str | None = None, full: bool = False,
         print(row)
     assert res["flex_savings_vs_static_pct"] > 0, (
         "serve-flex shows no carbon savings over serve-static")
+    res["_meta"] = bench_metadata()
     if smoke and out_path is None:
         print("smoke run: BENCH_serve.json left untouched")
         return res

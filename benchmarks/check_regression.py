@@ -1,0 +1,117 @@
+"""Perf-regression gate: ``PYTHONPATH=src python -m benchmarks.check_regression``.
+
+Re-runs ``bench_engine`` and ``bench_serve`` at ``--smoke`` scale and
+compares every *dimensionless* ratio metric (speedups, overhead factors,
+the serve-flex savings percentage) against the committed full-scale
+``BENCH_engine.json`` / ``BENCH_serve.json``.  Absolute wall times are
+never compared — CI machines and the smoke scale make them meaningless —
+but the ratios are scale-free: a 20x learn/execute speedup that drops to
+4x, or a 1.3x gating overhead that balloons to 3x, signals a performance
+collapse regardless of hardware.
+
+The tolerance is deliberately loose (2x either way) so CI noise never
+flakes the gate; it exists to catch order-of-magnitude collapses — an
+accidentally de-jitted scan loop, a per-slot host sync sneaking into the
+vector path, telemetry overhead leaking into the telemetry=None paths.
+Exits nonzero (failing the full-CI job) on any violated bound.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+# (path into the result dict, direction) — "up" means bigger is better
+# (speedups, savings: fail when the fresh ratio falls below committed/TOL);
+# "down" means smaller is better (overheads: fail above committed*TOL).
+RATIO_METRICS: list[tuple[tuple[str, ...], str]] = [
+    (("oracle_solve", "speedup"), "up"),
+    (("kb_query", "speedup"), "up"),
+    (("combined_learn_execute", "speedup"), "up"),
+    (("simulate", "carbonflex", "speedup"), "up"),
+    (("dag", "gating_overhead_x"), "down"),
+    (("scan", "geo-flex", "speedup_vs_scalar"), "up"),
+    (("scan", "dag-carbon", "speedup_vs_scalar"), "up"),
+    (("telemetry", "scan", "overhead_x"), "down"),
+]
+SERVE_METRICS: list[tuple[tuple[str, ...], str]] = [
+    (("flex_savings_vs_static_pct",), "up"),
+]
+TOL = 2.0
+
+
+def _get(d: dict, path: tuple[str, ...]):
+    for k in path:
+        if not isinstance(d, dict) or k not in d:
+            return None
+        d = d[k]
+    return d
+
+
+def _check(name: str, committed: dict, fresh: dict,
+           metrics: list[tuple[tuple[str, ...], str]]) -> list[str]:
+    failures = []
+    meta = committed.get("_meta", {})
+    stamp = (f" (committed at {meta.get('git_sha', '?')[:12]}"
+             f" {meta.get('timestamp', '?')})" if meta else "")
+    for path, direction in metrics:
+        want = _get(committed, path)
+        got = _get(fresh, path)
+        label = f"{name}/{'/'.join(path)}"
+        if want is None:
+            # metric added after the committed file was last regenerated —
+            # nothing to compare against yet, not a failure.
+            print(f"  skip {label}: not in committed baseline")
+            continue
+        if got is None:
+            failures.append(f"{label}: missing from the fresh run")
+            continue
+        ok = got >= want / TOL if direction == "up" else got <= want * TOL
+        verdict = "ok  " if ok else "FAIL"
+        print(f"  {verdict} {label}: fresh {got} vs committed {want}"
+              f" ({'>=' if direction == 'up' else '<='} bound"
+              f" {want / TOL if direction == 'up' else want * TOL:.3g})")
+        if not ok:
+            failures.append(
+                f"{label}: fresh {got} vs committed {want}{stamp} breaches "
+                f"the {TOL}x tolerance — performance collapse")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--engine-json", default=os.path.join(
+        ROOT, "BENCH_engine.json"))
+    ap.add_argument("--serve-json", default=os.path.join(
+        ROOT, "BENCH_serve.json"))
+    args = ap.parse_args()
+
+    from . import bench_engine, bench_serve
+
+    failures: list[str] = []
+    for name, path, module, metrics in (
+            ("engine", args.engine_json, bench_engine, RATIO_METRICS),
+            ("serve", args.serve_json, bench_serve, SERVE_METRICS)):
+        if not os.path.exists(path):
+            print(f"{name}: no committed {os.path.basename(path)}, skipping")
+            continue
+        with open(path) as f:
+            committed = json.load(f)
+        print(f"{name}: fresh --smoke run vs {os.path.basename(path)}")
+        fresh = module.run_all(full=False, smoke=True)
+        failures += _check(name, committed, fresh, metrics)
+
+    if failures:
+        print("\nperformance regression gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("\nperformance regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

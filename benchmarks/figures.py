@@ -258,6 +258,52 @@ def resilience() -> dict:
                     "stale_feed": blind.to_csv()}}
 
 
+def attribution() -> dict:
+    """§Telemetry (ISSUE 9): carbon attribution for the four headline
+    policy families vs their baselines — each savings delta decomposed
+    into named causes (temporal shifting, capacity scaling, geo
+    placement, migration overhead, precision tiering, fault restore)
+    that sum float-exactly to the measured delta (``Attribution.check``
+    asserts ``==``, not a tolerance).  The per-run tables are exported
+    as results/bench/attribution.csv by ``benchmarks.run``."""
+    from repro.experiment import ServingConfig, Sweep
+    from repro.telemetry import CAUSES
+    from repro.traces import DagConfig
+
+    grids = {
+        "carbonflex": Sweep(base=Scenario(capacity=40, seed=7),
+                            policies=["carbon-agnostic", "carbonflex"]),
+        "geo-flex": Sweep(base=Scenario(regions=("california", "ontario"),
+                                        capacity=24, seed=7),
+                          policies=["geo-static", "geo-flex"]),
+        "dag-cap": Sweep(base=Scenario(dag=DagConfig(), capacity=40, seed=7),
+                         policies=["dag-fcfs", "dag-cap"]),
+        "serve-flex": Sweep(base=Scenario(serving=ServingConfig(
+                                requests_per_day=3e5, servers=16),
+                                learn_weeks=1, seed=7),
+                            policies=["serve-static", "serve-flex"]),
+    }
+    out: dict = {}
+    csv_lines = ["family,policy,baseline,seed,delta_g,savings_pct,"
+                 + ",".join(CAUSES)]
+    for family, sweep in grids.items():
+        res = sweep.run()
+        atts = res.attributions()             # .check() runs inside
+        per_seed = []
+        for att, row in zip(atts, [r for r in res.rows()
+                                   if r["policy"] != res.baseline]):
+            d = att.to_dict()
+            d["seed"] = row["seed"]
+            per_seed.append(d)
+            csv_lines.append(
+                f"{family},{att.policy},{att.baseline},{row['seed']},"
+                f"{att.delta_g!r},{round(att.savings_pct, 2)},"
+                + ",".join(repr(att.causes[c]) for c in CAUSES))
+        out[family] = per_seed
+    out["csv"] = "\n".join(csv_lines) + "\n"
+    return out
+
+
 ALL = {
     "fig6_cpu_cluster": fig6_cpu_cluster,
     "fig7_gpu_cluster": fig7_gpu_cluster,
@@ -273,4 +319,5 @@ ALL = {
     "fault_sensitivity": fault_sensitivity,
     "forecast_gap": forecast_gap,
     "resilience": resilience,
+    "attribution": attribution,
 }

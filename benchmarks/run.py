@@ -103,6 +103,27 @@ def _figure_suite(args, failures: list[str], section) -> None:
                       f"--force to regenerate per-cell tables)",
                       file=sys.stderr)
             continue
+        if name == "attribution":
+            for family, runs in res.items():
+                if family.startswith("_") or family == "csv":
+                    continue
+                for d in runs:
+                    top = max(d["causes"], key=lambda c: abs(d["causes"][c]))
+                    print(f"{name}/{family}/seed{d['seed']},0,"
+                          f"savings={round(d['savings_pct'], 2)}%"
+                          f";top_cause={top}"
+                          f";top_g={d['causes'][top]:.1f}")
+            csv = res.get("csv")
+            if csv:
+                path = os.path.join(RESULTS_DIR, "attribution.csv")
+                with open(path, "w") as f:
+                    f.write(csv)
+                print(f"{name},0,csv={path}")
+            else:
+                print(f"{name},0,csv=missing (stale cache; rerun with "
+                      f"--force to regenerate per-run tables)",
+                      file=sys.stderr)
+            continue
         if name == "forecast_gap":
             for fc, pols in res["summary"].items():
                 for pol, s in pols.items():

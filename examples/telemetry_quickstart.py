@@ -1,0 +1,75 @@
+"""Telemetry quickstart: trace every per-slot decision, attribute the
+carbon savings to named causes, and profile where the wall-clock goes.
+
+Attach a ``Telemetry`` bundle to any sweep and three observability
+surfaces light up, none of which changes a single result float:
+
+- **decision traces** — every engine emits the same per-slot event
+  stream (admit / suspend / resume / scale / migrate / evict / preempt /
+  checkpoint / restore / tier-switch / forecast-read) through the
+  recorder, identical across scalar, vector and scan paths;
+- **carbon attribution** — each policy's savings against its cell
+  baseline decomposes into named causes (temporal shifting, capacity
+  scaling, geo placement, migration overhead, precision tiering, fault
+  restore) that sum float-exact to the measured delta;
+- **phase profiling** — learn / provision / decide / execute wall-clock,
+  ``block_until_ready``-bracketed so device work is charged to the phase
+  that launched it.
+
+  PYTHONPATH=src python examples/telemetry_quickstart.py
+  PYTHONPATH=src python examples/telemetry_quickstart.py --tiny  # CI smoke
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.experiment import Scenario, Sweep
+from repro.telemetry import MemoryRecorder, PhaseProfiler, Telemetry, explain
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--capacity", type=int, default=24)
+    ap.add_argument("--weeks", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--tiny", action="store_true",
+                    help="seconds-not-minutes smoke configuration for CI")
+    args = ap.parse_args()
+    if args.tiny:
+        args.capacity, args.weeks = 8, 1
+
+    tel = Telemetry(recorder=MemoryRecorder(), profiler=PhaseProfiler())
+    sweep = Sweep(
+        base=Scenario(capacity=args.capacity, learn_weeks=args.weeks,
+                      family="alibaba" if args.tiny else "google",
+                      seed=args.seed),
+        policies=["carbon-agnostic", "wait-awhile", "carbonflex"],
+        telemetry=tel)
+    res = sweep.run(progress=print)
+    print()
+    print(res.table())
+
+    # -- carbon attribution: why did each policy save what it saved? ------
+    print()
+    for att in res.attributions():       # additivity checked inside
+        print(att.table())
+        print()
+
+    # -- decision traces: what did carbonflex actually *do*? --------------
+    row = next(r for r in res.rows() if r["policy"] == "carbonflex")
+    label = f"{row['region']}/s{row['seed']}/{row['fault']}/carbonflex"
+    counts = tel.recorder.counts(run=label)
+    print(f"events[{label}]: "
+          + ", ".join(f"{k}={n}" for k, n in counts.items()))
+
+    # -- the whole story for one run, in one report -----------------------
+    sims = dict(zip((r["policy"] for r in res.rows()), res.results))
+    print()
+    print(explain(sims["carbonflex"], baseline=sims["carbon-agnostic"],
+                  recorder=tel.recorder, profiler=tel.profiler, run=label))
+
+
+if __name__ == "__main__":
+    main()

@@ -66,6 +66,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Callable, Sequence
 
 import numpy as np
@@ -83,6 +84,7 @@ from .dag import DagCapPolicy, DagCarbonPolicy, DagFcfsPolicy
 from .forecast import PerfectForecast, QuantileCIView
 from .geo import GeoFlexPolicy, GeoGreedyPolicy, GeoStaticPolicy
 from .types import GeoCluster, SimResult, SlotLog
+from ..telemetry import Telemetry
 
 _EPS = 1e-9
 _BIG_T = np.int64(2 ** 62)     # arrival sentinel for padding rows
@@ -995,7 +997,8 @@ def _collect_chunks(prog_consts, carry, chunk_fn, xs_builder, t0: int,
 
 
 def _run_single_native(packed, ci, ci_pol, cluster, policy, t0, horizon,
-                       max_overrun, kind) -> SimResult:
+                       max_overrun, kind,
+                       telemetry: Telemetry | None = None) -> SimResult:
     from .simulator import _run_resilience
 
     prog = _build_single(packed, cluster, policy, ci_pol, kind, t0, horizon)
@@ -1008,16 +1011,82 @@ def _run_single_native(packed, ci, ci_pol, cluster, policy, t0, horizon,
     def chunk_fn(consts, carry, xs):
         return _single_chunk(consts, carry, xs, prog.uniform, prog.deps)
 
+    prof = telemetry.profiler if telemetry is not None else None
+    if prof is not None:
+        _pt = time.perf_counter()
     ys, n_valid = _collect_chunks(prog.consts, prog.carry0, chunk_fn,
                                   xs_builder, t0, t0 + horizon, t_hard)
+    if prof is not None:
+        # device_get inside _collect_chunks already synchronised the scan
+        prof.add("decide", time.perf_counter() - _pt)
     return _account_single(packed, ci, ci_pol, cluster, policy, t0, ys,
-                           n_valid, prog)
+                           n_valid, prog, telemetry=telemetry)
+
+
+def _scan_admit_slots(packed, t0, n_valid, fs, fr):
+    """Reconstruct each row's admission slot from the finish grid.
+
+    Mirrors the vector engine exactly: a row enters the system at
+    ``max(arrival, t0)``, except DAG rows wait for every predecessor and
+    release the slot *after* the last one finishes.  Rows whose
+    predecessors never finish (or that admit past the run) return -1."""
+    admit = np.maximum(packed.arrival, t0).astype(np.int64, copy=True)
+    if packed.has_deps:
+        comp = np.full(packed.n, -1, dtype=np.int64)
+        comp[fr] = t0 + fs
+        id2row = packed.id2row
+        for r, job in enumerate(packed.jobs):
+            for dep in job.deps:
+                c = comp[id2row[dep]]
+                if c < 0:
+                    admit[r] = -1
+                    break
+                admit[r] = max(admit[r], c + 1)
+    admit[admit - t0 >= n_valid] = -1
+    return admit
+
+
+def _scan_slot_events(take, fs, fr, n_valid):
+    """Vectorised resume/suspend derivation from the dense take grid.
+
+    Semantically identical to feeding ``SlotEventTracker.step`` the
+    per-slot allocation stream (the native scan k is always ``k_min``,
+    so scale events cannot fire), but computed in a handful of whole-run
+    numpy passes instead of a per-slot Python walk — this is what keeps
+    scan-path recording inside its 1.3x overhead budget.  Returns
+    ``(resume_rows, resume_bounds, suspend_rows, suspend_bounds)`` with
+    rows ascending within each slot (scan packing sorts rows by job id,
+    so ascending row order == the tracker's sorted-job suspend order).
+    """
+    m = np.asarray(take, dtype=bool)
+    n = m.shape[1]
+    # on/off transitions between consecutive slots (transition index i is
+    # slot i+1); slot 0 has no transitions — first activations there are
+    # starts, and nothing can switch off into it.
+    cs, cr = np.nonzero(m[1:] & ~m[:-1])
+    # a row's first switch-on is its start (admit covers it), unless the
+    # row was already running at slot 0 — then every switch-on resumes.
+    uniq, first = np.unique(cr, return_index=True)
+    keep = np.ones(len(cr), dtype=bool)
+    keep[first[~m[0][uniq]]] = False
+    rs, rr = cs[keep] + 1, cr[keep]
+    # a switch-off is a suspend unless the row finished at the prior slot
+    # (each row finishes at most once, so a per-row slot table suffices)
+    os_, orow = np.nonzero(m[:-1] & ~m[1:])
+    finslot = np.full(n, -2, dtype=np.int64)
+    if len(fs):
+        finslot[np.asarray(fr)] = fs
+    keep = os_ != finslot[orow]
+    ss, sr = os_[keep] + 1, orow[keep]
+    return (rr.tolist(), np.searchsorted(rs, np.arange(n_valid + 1)),
+            sr.tolist(), np.searchsorted(ss, np.arange(n_valid + 1)))
 
 
 def _account_single(packed, ci, ci_pol, cluster, policy, t0, ys, n_valid,
-                    prog) -> SimResult:
-    from .simulator import _run_resilience
+                    prog, telemetry: Telemetry | None = None) -> SimResult:
+    from .simulator import _run_resilience, _telemetry_hooks
 
+    tele, prof, _, _ = _telemetry_hooks(telemetry, None)
     n = packed.n
     slot_h = cluster.slot_hours
     eta = cluster.eta_net
@@ -1028,18 +1097,39 @@ def _account_single(packed, ci, ci_pol, cluster, policy, t0, ys, n_valid,
     total_energy = 0.0
     total_carbon = 0.0
     take_a = ys["take"][:n_valid, :n]
-    bounds, _, k_act, e_act = _active_energy(packed, prog.power, slot_h,
-                                             eta, take_a)
+    bounds, r_idx, k_act, e_act = _active_energy(packed, prog.power, slot_h,
+                                                 eta, take_a)
     fs, fr = np.nonzero(ys["fin"][:n_valid, :n])
     fbounds = np.searchsorted(fs, np.arange(n_valid + 1))
     wfin_f = ys["waited_fin"][:n_valid, :n][fs, fr]
     viol_f = ys["viol"][:n_valid, :n][fs, fr]
     n_rows_a = ys["n_rows"][:n_valid]
     civ_a = _ci_block(ci, t0, n_valid)
+    admits_by: dict[int, list[int]] = {}
+    if tele is not None:
+        aslots = _scan_admit_slots(packed, t0, n_valid, fs, fr)
+        for r, s in enumerate(aslots.tolist()):     # row order == sorted
+            if s >= 0:
+                admits_by.setdefault(s, []).append(r)
+        jids = packed.job_ids.tolist()
+        kv = [float(k) for k in packed.k_min.tolist()]
+        rr, rb, sr, sb = _scan_slot_events(take_a, fs, fr, n_valid)
+        emit = tele.emit
+    if prof is not None:
+        _pt = time.perf_counter()
     for i in range(n_valid):
         t = t0 + i
         civ = float(civ_a[i])
         lo, hi = bounds[i], bounds[i + 1]
+        if tele is not None:
+            for r in admits_by.get(t, ()):
+                emit(t, "admit", job=jids[r])
+            if ci_pol is not ci:
+                emit(t, "forecast-read", value=float(ci_pol.staleness(t)))
+            for r in rr[rb[i]:rb[i + 1]]:
+                emit(t, "resume", job=jids[r], value=kv[r])
+            for r in sr[sb[i]:sb[i + 1]]:
+                emit(t, "suspend", job=jids[r])
         energy = 0.0
         for v in e_act[lo:hi].tolist():        # sequential sum, scalar order
             energy += v
@@ -1059,6 +1149,8 @@ def _account_single(packed, ci, ci_pol, cluster, policy, t0, ys, n_valid,
                             running=running,
                             queued=int(n_rows_a[i]) - len(frows)
                             - running))
+    if prof is not None:
+        prof.add("execute", time.perf_counter() - _pt)
     return SimResult(
         policy=policy.name, carbon_g=total_carbon, energy_kwh=total_energy,
         slots=logs, wait_slots=wait, violations=violations,
@@ -1067,8 +1159,10 @@ def _account_single(packed, ci, ci_pol, cluster, policy, t0, ys, n_valid,
 
 
 def _run_geo_native(packed, mci, ci_pol, geo, policy, t0, horizon,
-                    max_overrun, kind) -> SimResult:
-    from .simulator import (_accumulate_regions, _run_resilience)
+                    max_overrun, kind,
+                    telemetry: Telemetry | None = None) -> SimResult:
+    from .simulator import (_accumulate_regions, _run_resilience,
+                            _telemetry_hooks)
 
     lookahead = int(getattr(policy, "lookahead", 24))
     t_hard = t0 + horizon + max_overrun
@@ -1077,8 +1171,13 @@ def _run_geo_native(packed, mci, ci_pol, geo, policy, t0, horizon,
     def chunk_fn(consts, carry, xs):
         return _geo_chunk(consts, carry, xs, kind, lookahead, prog.uniform)
 
+    tele, prof, _, _ = _telemetry_hooks(telemetry, None)
+    if prof is not None:
+        _pt = time.perf_counter()
     ys, n_valid = _collect_chunks(prog.consts, prog.carry0, chunk_fn,
                                   prog.xs_fn, t0, t0 + horizon, t_hard)
+    if prof is not None:
+        prof.add("decide", time.perf_counter() - _pt)
 
     n = packed.n
     n_regions = geo.n_regions
@@ -1109,17 +1208,44 @@ def _run_geo_native(packed, mci, ci_pol, geo, policy, t0, horizon,
     mbounds = np.searchsorted(ms_idx, np.arange(n_valid + 1))
     n_rows_a = ys["n_rows"][:n_valid]
     civ_a = _ci_vec_acct_block(mci, t0, n_valid)
+    admits_by: dict[int, list[int]] = {}
+    if tele is not None:
+        # geo native excludes DAG jobs, so admission is arrival-only
+        aslots = _scan_admit_slots(packed, t0, n_valid, (), ())
+        for r, s in enumerate(aslots.tolist()):     # row order == sorted
+            if s >= 0:
+                admits_by.setdefault(s, []).append(r)
+        jids = packed.job_ids.tolist()
+        kv = [float(k) for k in packed.k_min.tolist()]
+        rr, rb, sr, sb = _scan_slot_events(take_a, fs, fr, n_valid)
+        emit = tele.emit
+    if prof is not None:
+        _pt = time.perf_counter()
     for i in range(n_valid):
         t = t0 + i
         ci_vec = civ_a[i]
         lo, hi = bounds[i], bounds[i + 1]
+        mrows = mr_idx[mbounds[i]:mbounds[i + 1]]
+        if tele is not None:
+            for r in admits_by.get(t, ()):
+                emit(t, "admit", job=jids[r])
+            if ci_pol is not mci:
+                emit(t, "forecast-read", value=float(ci_pol.staleness(t)))
+            for row in mrows.tolist():             # decision order
+                src = (int(reg_a[i - 1, row]) if i > 0
+                       else geo.home_region(row))
+                emit(t, "migrate", job=jids[row],
+                     value=float(reg_a[i, row]), detail=f"from={src}")
+            for r in rr[rb[i]:rb[i + 1]]:
+                emit(t, "resume", job=jids[r], value=kv[r])
+            for r in sr[sb[i]:sb[i + 1]]:
+                emit(t, "suspend", job=jids[r])
         e_vec = e_act[lo:hi]
         a_regions = areg_act[lo:hi]
         energy_r = np.zeros(n_regions)
         for r in range(n_regions):
             for v in e_vec[a_regions == r].tolist():
                 energy_r[r] += v
-        mrows = mr_idx[mbounds[i]:mbounds[i + 1]]
         mc = 0.0
         for row in mrows.tolist():             # row order == decision order
             e = prog.mig_e[row]
@@ -1147,6 +1273,8 @@ def _run_geo_native(packed, mci, ci_pol, geo, policy, t0, horizon,
                             running=running,
                             queued=int(n_rows_a[i]) - len(frows)
                             - running))
+    if prof is not None:
+        prof.add("execute", time.perf_counter() - _pt)
     return SimResult(
         policy=policy.name, carbon_g=total_carbon, energy_kwh=total_energy,
         slots=logs, wait_slots=wait, violations=violations,
@@ -1162,7 +1290,8 @@ def _run_geo_native(packed, mci, ci_pol, geo, policy, t0, horizon,
 
 def simulate_scan(jobs, ci, cluster, policy, t0: int = 0,
                   horizon: int | None = None, max_overrun: int = 24 * 21,
-                  faults=None, packed=None) -> SimResult:
+                  faults=None, packed=None,
+                  telemetry: Telemetry | None = None) -> SimResult:
     """``simulate(..., engine="scan")``: jitted lax.scan slot loop for
     native policies, transparent vector-engine delegation otherwise."""
     from .simulator import (_packed_for, _policy_ci_view, _simulate_vector,
@@ -1178,18 +1307,21 @@ def simulate_scan(jobs, ci, cluster, policy, t0: int = 0,
             # "geo engines do not support DAG jobs" rejection
             return _simulate_geo_vector(jobs, ci, cluster, policy, t0,
                                         horizon, max_overrun, faults,
-                                        packed=packed)
+                                        packed=packed, telemetry=telemetry)
         return _simulate_vector(jobs, ci, cluster, policy, t0, horizon,
-                                max_overrun, faults, packed=packed)
+                                max_overrun, faults, packed=packed,
+                                telemetry=telemetry)
     horizon = int(horizon if horizon is not None else len(ci) - t0)
     ci_pol = _policy_ci_view(ci)
     policy.on_window_start(ci_pol, t0, horizon, packed.jobs, cluster)
     with enable_x64():
         if kind in _SINGLE_KINDS:
             return _run_single_native(packed, ci, ci_pol, cluster, policy,
-                                      t0, horizon, max_overrun, kind)
+                                      t0, horizon, max_overrun, kind,
+                                      telemetry=telemetry)
         return _run_geo_native(packed, ci, ci_pol, cluster, policy, t0,
-                               horizon, max_overrun, kind)
+                               horizon, max_overrun, kind,
+                               telemetry=telemetry)
 
 
 def simulate_many_scan(cases: Sequence) -> list[SimResult]:
@@ -1205,6 +1337,7 @@ def simulate_many_scan(cases: Sequence) -> list[SimResult]:
     with enable_x64():
         for i, case in enumerate(cases):
             packed = _packed_for(case.jobs)
+            telemetry = getattr(case, "telemetry", None)
             kind = native_kind(case.policy, case.cluster, case.faults)
             if kind is None or packed.n == 0 or (
                     packed.has_deps and isinstance(case.cluster, GeoCluster)):
@@ -1213,7 +1346,8 @@ def simulate_many_scan(cases: Sequence) -> list[SimResult]:
                       else _simulate_vector)
                 results[i] = fn(case.jobs, case.ci, case.cluster,
                                 case.policy, case.t0, case.horizon,
-                                case.max_overrun, case.faults, packed=packed)
+                                case.max_overrun, case.faults, packed=packed,
+                                telemetry=telemetry)
                 continue
             horizon = int(case.horizon if case.horizon is not None
                           else len(case.ci) - case.t0)
@@ -1224,7 +1358,8 @@ def simulate_many_scan(cases: Sequence) -> list[SimResult]:
                 results[i] = _run_geo_native(packed, case.ci, ci_pol,
                                              case.cluster, case.policy,
                                              case.t0, horizon,
-                                             case.max_overrun, kind)
+                                             case.max_overrun, kind,
+                                             telemetry=telemetry)
                 continue
             prog = _build_single(packed, case.cluster, case.policy, ci_pol,
                                  kind, case.t0, horizon)
@@ -1257,11 +1392,18 @@ def _run_single_tile(members, results) -> None:
             return _single_chunk(consts, carry, xs, prog.uniform,
                                  prog.deps)
 
+        telemetry = getattr(case, "telemetry", None)
+        prof = telemetry.profiler if telemetry is not None else None
+        if prof is not None:
+            _pt = time.perf_counter()
         ys, n_valid = _collect_chunks(prog.consts, prog.carry0, chunk_fn,
                                       xs_builder, case.t0,
                                       case.t0 + horizon, t_hard)
+        if prof is not None:
+            prof.add("decide", time.perf_counter() - _pt)
         results[i] = _account_single(packed, case.ci, ci_pol, case.cluster,
-                                     case.policy, case.t0, ys, n_valid, prog)
+                                     case.policy, case.t0, ys, n_valid, prog,
+                                     telemetry=telemetry)
         return
 
     uniform = members[0][3].uniform
@@ -1276,6 +1418,7 @@ def _run_single_tile(members, results) -> None:
     span = members[0][1].max_overrun + horizon_b
     ys_parts = []
     off = 0
+    _dev_t0 = time.perf_counter()
     while off < span:
         size = min(CHUNK if off < horizon_b else OVERRUN_CHUNK, span - off)
         ts_b = np.stack([np.arange(m[1].t0 + off, m[1].t0 + off + size)
@@ -1289,11 +1432,18 @@ def _run_single_tile(members, results) -> None:
         off += size
         if bool(np.asarray(carry["ended"]).all()):
             break
+    # the vmapped dispatch is shared; split its wall-clock evenly across
+    # the tile so per-case phase totals still sum to real time
+    _dev_dt = (time.perf_counter() - _dev_t0) / len(members)
     ys_all = {k: np.concatenate([p[k] for p in ys_parts], axis=1)
               for k in ys_parts[0]}
     for j, (i, case, packed, prog, ci_pol) in enumerate(members):
+        telemetry = getattr(case, "telemetry", None)
+        if telemetry is not None and telemetry.profiler is not None:
+            telemetry.profiler.add("decide", _dev_dt)
         ys = {k: v[j] for k, v in ys_all.items()}
         ended = np.asarray(ys["ended"], dtype=bool)
         n_valid = int(np.argmax(ended)) if ended.any() else len(ended)
         results[i] = _account_single(packed, case.ci, ci_pol, case.cluster,
-                                     case.policy, case.t0, ys, n_valid, prog)
+                                     case.policy, case.t0, ys, n_valid, prog,
+                                     telemetry=telemetry)

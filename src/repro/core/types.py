@@ -306,6 +306,8 @@ class ServingMetrics:
     utilization: np.ndarray | None = None
     quality: np.ndarray | None = None
     violation_frac: np.ndarray | None = None
+    energy: np.ndarray | None = None      # per-slot kWh (telemetry)
+    carbon: np.ndarray | None = None      # per-slot gCO2 at true CI
 
     @property
     def violation_rate(self) -> float:

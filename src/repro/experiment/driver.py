@@ -22,6 +22,7 @@ from repro.core.policy import learn_window
 from repro.core.simulator import SimCase, simulate_many
 from repro.core.types import SimResult
 from repro.serving import ServeCase, simulate_serving_many
+from repro.telemetry import Telemetry
 
 from .registry import (PolicyContext, check_scenario_policies, get_spec,
                        make_policy, needs_kb)
@@ -206,6 +207,7 @@ def run(
     backend: str = "numpy",
     forecast_quantile: float = 0.7,
     progress: Callable[[str], None] | None = None,
+    telemetry: Telemetry | None = None,
 ) -> ExperimentResult:
     """Run ``scenario`` under the named policies (registry names).
 
@@ -215,6 +217,12 @@ def run(
     state for the next (rolling KB window + MPC history warm start).
     ``kb_kwargs`` forwards to :class:`KnowledgeBase` (e.g. ``max_windows``
     for the aging window, feature weights for tuning studies).
+    ``telemetry`` (README §Observability) attaches a decision-trace
+    recorder and/or phase profiler: every engine dispatch records under a
+    ``"{policy}/w{week}"`` run label, and the learning/provisioning work
+    here brackets the profiler's ``learn``/``provision`` phases.  The
+    default ``None`` leaves every engine on its untouched zero-overhead
+    path.
     """
     if policies is None:
         policies = (DEFAULT_GEO_POLICIES if scenario.is_geo
@@ -225,9 +233,19 @@ def run(
     check_scenario_policies(names, scenario.is_geo, scenario.is_dag,
                             scenario.is_serving)
     t_start = time.perf_counter()
-    mat = scenario.materialize()
-    ctx = prepare_context(mat, names, kb_kwargs=kb_kwargs, backend=backend,
-                          forecast_quantile=forecast_quantile)
+    prof = telemetry.profiler if telemetry is not None else None
+    if prof is not None:
+        with prof.phase("provision"):
+            mat = scenario.materialize()
+        with prof.phase("learn"):
+            ctx = prepare_context(mat, names, kb_kwargs=kb_kwargs,
+                                  backend=backend,
+                                  forecast_quantile=forecast_quantile)
+    else:
+        mat = scenario.materialize()
+        ctx = prepare_context(mat, names, kb_kwargs=kb_kwargs,
+                              backend=backend,
+                              forecast_quantile=forecast_quantile)
     instances = {n: make_policy(n, ctx) for n in names}
     weekly: dict[str, list[SimResult]] = {n: [] for n in names}
 
@@ -241,7 +259,9 @@ def run(
             cases = [ServeCase(demand=mat.serving.demand[t0: t0 + WEEK],
                                rate=mat.serving.rate, ci=mat.ci,
                                config=mat.serving.config,
-                               policy=instances[n], t0=t0, label=n)
+                               policy=instances[n], t0=t0, label=n,
+                               telemetry=telemetry.for_run(f"{n}/w{w}")
+                               if telemetry is not None else None)
                      for n in names]
             for n, res in zip(names, simulate_serving_many(cases)):
                 weekly[n].append(res)
@@ -263,8 +283,15 @@ def run(
             # continuous learning: replay the week just evaluated
             prev = [j for j in mat.jobs if t0 - WEEK <= j.arrival < t0]
             if ctx.kb is not None:
-                learn_window(ctx.kb, mat.jobs, mat.ci, 0, WEEK, mat.cluster,
-                             offsets=(t0 - WEEK,), backend=backend)
+                if prof is not None:
+                    with prof.phase("learn"):
+                        learn_window(ctx.kb, mat.jobs, mat.ci, 0, WEEK,
+                                     mat.cluster, offsets=(t0 - WEEK,),
+                                     backend=backend)
+                else:
+                    learn_window(ctx.kb, mat.jobs, mat.ci, 0, WEEK,
+                                 mat.cluster, offsets=(t0 - WEEK,),
+                                 backend=backend)
             for n in names:
                 if get_spec(n).needs_history and prev:
                     instances[n].warm_start(prev)
@@ -276,7 +303,9 @@ def run(
         cases = [SimCase(jobs=ev, ci=ci_w, cluster=cluster_w,
                          policy=instances[n], t0=t0, horizon=WEEK,
                          faults=_fresh_faults(scenario), label=n,
-                         engine=scenario.engine)
+                         engine=scenario.engine,
+                         telemetry=telemetry.for_run(f"{n}/w{w}")
+                         if telemetry is not None else None)
                  for n in names]
         for n, res in zip(names, simulate_many(cases)):
             weekly[n].append(res)

@@ -91,22 +91,47 @@ class OracleGap:
 
     def run(self, progress: Callable[[str], None] | None = None
             ) -> "OracleGapResult":
+        from repro.telemetry import attribute
+
         sweep = self.sweep()
-        rows = sweep.run(progress=progress).rows()
+        res = sweep.run(progress=progress)
+        rows = res.rows()
         cell = lambda r: (r["region"], r["seed"], r["fault"], r["forecast"])  # noqa: E731
         oracle_sv = {cell(r): r["savings_pct"]
                      for r in rows if r["policy"] == "oracle"}
+        # per-cell SimResults, for attributing each gap by cause
+        sims = {(cell(r), r["policy"]): s
+                for r, s in zip(res.rows_, res.results or ())}
+        base_c = {cell(r): s.carbon_g
+                  for r, s in zip(res.rows_, res.results or ())
+                  if r["policy"] == res.baseline}
         gap_rows = []
         for r in rows:
             if r["policy"] == "oracle":
                 continue
-            gap_rows.append({
+            row = {
                 "region": r["region"], "seed": r["seed"], "fault": r["fault"],
                 "forecast": r["forecast"], "policy": r["policy"],
                 "savings_pct": r["savings_pct"],
                 "oracle_savings_pct": oracle_sv[cell(r)],
                 "gap_pp": round(oracle_sv[cell(r)] - r["savings_pct"], 3),
-            })
+            }
+            # Attribute the gap itself: the oracle "vs the policy as
+            # baseline" decomposes the grams the oracle saves on top into
+            # named causes — capacity_scaling is provisioning-phase loss,
+            # temporal_shifting execution-phase loss (the ROADMAP
+            # "execution-phase-dominated" hypothesis, measured).  In pp
+            # of the sweep baseline's carbon, the same unit as gap_pp.
+            orc = sims.get((cell(r), "oracle"))
+            pol = sims.get((cell(r), r["policy"]))
+            bc = base_c.get(cell(r), 0.0)
+            if orc is not None and pol is not None and bc > 0:
+                att = attribute(orc, pol)
+                att.check()
+                row["gap_attribution_pp"] = {
+                    c: round(100.0 * v / bc, 3)
+                    for c, v in att.causes.items() if v != 0.0}
+            gap_rows.append(row)
         # the same disambiguated labels Sweep stamps on the rows;
         # dict.fromkeys dedupes (equal models only) while keeping order
         order = forecast_labels(self.forecasts)
@@ -153,6 +178,14 @@ class OracleGapResult:
                     "gap_mean_pp": round(float(gap.mean()), 3),
                     "gap_std_pp": round(float(gap.std()), 3),
                 }
+                atts = [r["gap_attribution_pp"] for r in rs
+                        if "gap_attribution_pp" in r]
+                if atts:
+                    causes = sorted({c for a in atts for c in a})
+                    out[fc][pol]["gap_attribution_mean_pp"] = {
+                        c: round(float(np.mean([a.get(c, 0.0)
+                                                for a in atts])), 3)
+                        for c in causes}
         self._summary = out
         return out
 
@@ -223,6 +256,12 @@ def main() -> None:
         curve = ", ".join(f"{fc}={g:+.2f}pp"
                           for fc, g in res.degradation_curve(pol))
         print(f"degradation[{pol}]: {curve}")
+    perfect = res.summary().get("perfect", {})
+    for pol, s in perfect.items():
+        att = s.get("gap_attribution_mean_pp")
+        if att:
+            split = ", ".join(f"{c}={v:+.2f}pp" for c, v in att.items())
+            print(f"gap attribution[{pol}] (perfect forecast): {split}")
     if args.out:
         with open(args.out, "w") as f:
             f.write(res.to_json())

@@ -26,6 +26,7 @@ from repro.core.forecast import ForecastModel, forecast_labels
 from repro.core.simulator import SimCase, simulate_many
 from repro.core.types import SimResult
 from repro.serving import ServeCase, simulate_serving_many
+from repro.telemetry import Attribution, Telemetry, attribute
 
 from .driver import DEFAULT_POLICIES, _fresh_faults, prepare_context
 from .registry import check_scenario_policies, make_policy
@@ -79,6 +80,12 @@ class Sweep:
     baseline: str = "carbon-agnostic"
     backend: str = "numpy"
     kb_kwargs: dict | None = None
+    # Observability (README §Observability): when set, every cell runs
+    # with this telemetry's recorder/profiler attached, each under its
+    # own run label (the case label), so one sweep yields one decision
+    # trace per cell plus learn/provision/decide/execute phase totals.
+    # ``None`` (the default) keeps every engine on its untouched path.
+    telemetry: Telemetry | None = None
 
     def fault_axis(self) -> tuple[FaultProcess | None, ...]:
         if self.faults is None:
@@ -148,13 +155,25 @@ class Sweep:
         assert not axis_labels or len(scenarios) % len(axis_labels) == 0
         cases: list[SimCase] = []
         meta: list[dict] = []
+        prof = self.telemetry.profiler if self.telemetry is not None else None
         for i, sc in enumerate(scenarios):
-            mat = sc.materialize()
+            if prof is not None:
+                with prof.phase("provision"):
+                    mat = sc.materialize()
+            else:
+                mat = sc.materialize()
             region_label = "+".join(sc.regions) if sc.is_geo else sc.region
             fc_label = axis_labels[i % len(axis_labels)]
-            ctx = prepare_context(mat, names, kb_kwargs=self.kb_kwargs,
-                                  backend=self.backend,
-                                  forecast_quantile=self.forecast_quantile)
+            if prof is not None:
+                with prof.phase("learn"):
+                    ctx = prepare_context(
+                        mat, names, kb_kwargs=self.kb_kwargs,
+                        backend=self.backend,
+                        forecast_quantile=self.forecast_quantile)
+            else:
+                ctx = prepare_context(mat, names, kb_kwargs=self.kb_kwargs,
+                                      backend=self.backend,
+                                      forecast_quantile=self.forecast_quantile)
             if progress is not None:
                 progress(f"prepared {region_label}/seed{sc.seed}"
                          + (f"/{fc_label}" if with_forecast else "")
@@ -166,13 +185,16 @@ class Sweep:
             for fm in self.fault_axis():
                 scf = dataclasses.replace(sc, faults=fm)
                 for name in names:
+                    label = (f"{region_label}/s{sc.seed}/{fault_label(fm)}"
+                             f"/{name}"
+                             + (f"/{fc_label}" if with_forecast else ""))
                     cases.append(SimCase(
                         jobs=mat.eval_jobs, ci=ci_c, cluster=cluster_c,
                         policy=make_policy(name, ctx), t0=mat.t0,
                         horizon=horizon, faults=_fresh_faults(scf),
-                        engine=sc.engine,
-                        label=f"{region_label}/s{sc.seed}/{fault_label(fm)}/{name}"
-                              + (f"/{fc_label}" if with_forecast else "")))
+                        engine=sc.engine, label=label,
+                        telemetry=self.telemetry.for_run(label)
+                        if self.telemetry is not None else None))
                     row = {"region": region_label, "seed": sc.seed,
                            "fault": fault_label(fm), "policy": name}
                     if with_forecast:
@@ -204,12 +226,24 @@ class Sweep:
         assert not axis_labels or len(scenarios) % len(axis_labels) == 0
         cases: list[ServeCase] = []
         meta: list[dict] = []
+        prof = self.telemetry.profiler if self.telemetry is not None else None
         for i, sc in enumerate(scenarios):
-            mat = sc.materialize()
+            if prof is not None:
+                with prof.phase("provision"):
+                    mat = sc.materialize()
+            else:
+                mat = sc.materialize()
             fc_label = axis_labels[i % len(axis_labels)]
-            ctx = prepare_context(mat, names, kb_kwargs=self.kb_kwargs,
-                                  backend=self.backend,
-                                  forecast_quantile=self.forecast_quantile)
+            if prof is not None:
+                with prof.phase("learn"):
+                    ctx = prepare_context(
+                        mat, names, kb_kwargs=self.kb_kwargs,
+                        backend=self.backend,
+                        forecast_quantile=self.forecast_quantile)
+            else:
+                ctx = prepare_context(mat, names, kb_kwargs=self.kb_kwargs,
+                                      backend=self.backend,
+                                      forecast_quantile=self.forecast_quantile)
             horizon = sc.eval_weeks * WEEK
             demand = mat.serving.demand[mat.t0: mat.t0 + horizon]
             if progress is not None:
@@ -218,12 +252,14 @@ class Sweep:
                          + f": {len(demand)} slots, "
                          f"{demand.sum() / 1e6:.2f}M requests")
             for name in names:
+                label = (f"{sc.region}/s{sc.seed}/{name}"
+                         + (f"/{fc_label}" if with_forecast else ""))
                 cases.append(ServeCase(
                     demand=demand, rate=mat.serving.rate, ci=mat.ci,
                     config=mat.serving.config,
-                    policy=make_policy(name, ctx), t0=mat.t0,
-                    label=f"{sc.region}/s{sc.seed}/{name}"
-                          + (f"/{fc_label}" if with_forecast else "")))
+                    policy=make_policy(name, ctx), t0=mat.t0, label=label,
+                    telemetry=self.telemetry.for_run(label)
+                    if self.telemetry is not None else None))
                 row = {"region": sc.region, "seed": sc.seed,
                        "fault": "none", "policy": name}
                 if with_forecast:
@@ -270,6 +306,35 @@ class SweepResult:
 
     def rows(self) -> list[dict]:
         return self.rows_
+
+    def attributions(self) -> list[Attribution]:
+        """Carbon-attribution of every non-baseline cell against its
+        cell's baseline run (same region/seed/fault/forecast), each
+        additive to the last bit (``Attribution.check`` passes by
+        construction).  Needs the in-memory ``results`` — a same-process
+        run, not a JSON round-trip."""
+        if self.results is None:
+            raise ValueError(
+                "attributions need the in-memory results; run the sweep "
+                "in-process (SweepResult.from_json drops them)")
+
+        def key(r: dict):
+            return (r["region"], r["seed"], r["fault"],
+                    r.get("forecast", ""))
+
+        base = {key(r): res for r, res in zip(self.rows_, self.results)
+                if r["policy"] == self.baseline}
+        out = []
+        for r, res in zip(self.rows_, self.results):
+            if r["policy"] == self.baseline:
+                continue
+            b = base.get(key(r))
+            if b is None:
+                continue
+            att = attribute(res, b)
+            att.check()
+            out.append(att)
+        return out
 
     def summary(self) -> dict[str, dict]:
         """Per-policy aggregates with cross-(region, seed, fault)

@@ -24,11 +24,13 @@ milliseconds with zero per-request Python.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
 from repro.core.carbon import CarbonService
 from repro.core.types import ServingMetrics, SimResult
+from repro.telemetry import Telemetry
 
 from .policies import ServeWindow
 from .tiers import CreditLedger, ServingConfig
@@ -62,6 +64,7 @@ class ServeCase:
     policy: object                   # ServeStaticPolicy / ... (duck-typed)
     t0: int = 0
     label: str = ""
+    telemetry: Telemetry | None = None
 
     def __post_init__(self) -> None:
         self.demand = np.asarray(self.demand, dtype=np.float64)
@@ -85,6 +88,16 @@ def _window(case: ServeCase, ci_pol) -> ServeWindow:
         inv_cap=np.array([1.0 / t.capacity_per_server for t in tiers]),
         slo=cfg.slo(), ci=ci_pol, rate=case.rate, t0=case.t0,
         servers=cfg.servers)
+
+
+def _serve_hooks(case: ServeCase):
+    """Split the case's telemetry into (event-emitter, profiler); both
+    None when telemetry is off so the hot loop pays a single branch."""
+    telemetry = case.telemetry
+    if telemetry is None:
+        return None, None
+    tele = telemetry if telemetry.recorder is not None else None
+    return tele, telemetry.profiler
 
 
 def _check_frac(frac: np.ndarray, policy_name: str) -> np.ndarray:
@@ -117,7 +130,7 @@ def _finalize(case: ServeCase, w: ServeWindow, fracs: np.ndarray,
         tier_names=tuple(t.name for t in w.tiers),
         tier_requests=tuple(float(x) for x in np.sum(splits, axis=0)),
         balance=balance, utilization=util, quality=quality,
-        violation_frac=viol)
+        violation_frac=viol, energy=energy, carbon=carbon)
     name = getattr(case.policy, "name", "serve")
     return SimResult(
         policy=name, carbon_g=float(np.sum(carbon)),
@@ -133,6 +146,8 @@ def _run_scalar(case: ServeCase) -> SimResult:
     ci_pol = case.ci.degraded()
     w = _window(case, ci_pol)
     case.policy.on_window_start(w)
+    tele, prof = _serve_hooks(case)
+    prev_tier = -1
     ledger = CreditLedger(gain=cfg.ledger_gain)
     T = len(case.demand)
     n = len(w.tiers)
@@ -144,10 +159,24 @@ def _run_scalar(case: ServeCase) -> SimResult:
     for i in range(T):
         t = case.t0 + i
         d = float(case.demand[i])
+        if tele is not None and ci_pol is not case.ci:
+            tele.emit(t, "forecast-read", value=float(ci_pol.staleness(t)))
+        if prof is not None:
+            _pt = time.perf_counter()
         frac = _check_frac(
             case.policy.decide(t, d, ledger.balance, cum_carbon,
                                cum_requests),
             getattr(case.policy, "name", "serve"))
+        if prof is not None:
+            _now = time.perf_counter()
+            prof.add("decide", _now - _pt)
+            _pt = _now
+        if tele is not None:
+            tier = int(np.argmax(frac))
+            if tier != prev_tier and prev_tier >= 0:
+                tele.emit(t, "tier-switch", value=float(tier),
+                          detail=f"from={prev_tier}")
+            prev_tier = tier
         q_t = float(np.sum(frac * w.q_vec))
         e_t = float(np.sum(frac * w.e_vec)) * (d / 1000.0)
         u_t = float(np.sum(frac * w.inv_cap)) * (d / w.servers)
@@ -162,6 +191,8 @@ def _run_scalar(case: ServeCase) -> SimResult:
         # a policy must not learn the true CI through its budget signal
         cum_carbon = cum_carbon + e_t * ci_pol.ci(t)
         cum_requests = cum_requests + d
+        if prof is not None:
+            prof.add("execute", time.perf_counter() - _pt)
     return _finalize(case, w, fracs, energy, carbon, util, viol, quality,
                      balance)
 
@@ -173,6 +204,8 @@ def _run_vector(case: ServeCase) -> SimResult:
     ci_pol = case.ci.degraded()
     w = _window(case, ci_pol)
     case.policy.on_window_start(w)
+    tele, prof = _serve_hooks(case)
+    prev_tier = -1
     ledger = CreditLedger(gain=cfg.ledger_gain)
     T = len(case.demand)
     fracs = np.zeros((T, len(w.tiers)))
@@ -183,10 +216,24 @@ def _run_vector(case: ServeCase) -> SimResult:
     for i in range(T):
         t = case.t0 + i
         d = float(case.demand[i])
+        if tele is not None and ci_pol is not case.ci:
+            tele.emit(t, "forecast-read", value=float(ci_pol.staleness(t)))
+        if prof is not None:
+            _pt = time.perf_counter()
         frac = _check_frac(
             case.policy.decide(t, d, ledger.balance, cum_carbon,
                                cum_requests),
             getattr(case.policy, "name", "serve"))
+        if prof is not None:
+            _now = time.perf_counter()
+            prof.add("decide", _now - _pt)
+            _pt = _now
+        if tele is not None:
+            tier = int(np.argmax(frac))
+            if tier != prev_tier and prev_tier >= 0:
+                tele.emit(t, "tier-switch", value=float(tier),
+                          detail=f"from={prev_tier}")
+            prev_tier = tier
         fracs[i] = frac
         q_t = float(np.sum(frac * w.q_vec))
         quality[i] = q_t
@@ -194,19 +241,29 @@ def _run_vector(case: ServeCase) -> SimResult:
         cum_carbon = cum_carbon + \
             float(np.sum(frac * w.e_vec)) * (d / 1000.0) * ci_pol.ci(t)
         cum_requests = cum_requests + d
+        if prof is not None:
+            prof.add("execute", time.perf_counter() - _pt)
     demand = case.demand
+    if prof is not None:
+        _pt = time.perf_counter()
     energy = (fracs * w.e_vec).sum(axis=1) * (demand / 1000.0)
     ci_true = np.array([case.ci.ci(case.t0 + i) for i in range(T)])
     carbon = energy * ci_true
     util = (fracs * w.inv_cap).sum(axis=1) * (demand / w.servers)
     viol = w.slo.violation_frac(util)
+    if prof is not None:
+        prof.add("execute", time.perf_counter() - _pt)
     return _finalize(case, w, fracs, energy, carbon, util, viol, quality,
                      balance)
 
 
-def simulate_serving(case: ServeCase, engine: str = "vector") -> SimResult:
+def simulate_serving(case: ServeCase, engine: str = "vector",
+                     telemetry: Telemetry | None = None) -> SimResult:
     """Run one serving case; ``engine`` picks the vector path (default) or
-    the scalar reference (bit-identical, for parity tests)."""
+    the scalar reference (bit-identical, for parity tests).  ``telemetry``
+    attaches a recorder/profiler without rebuilding the case."""
+    if telemetry is not None:
+        case = dataclasses.replace(case, telemetry=telemetry)
     if engine == "vector":
         return _run_vector(case)
     if engine == "scalar":

@@ -1,0 +1,88 @@
+"""Lightweight phase profilers for the experiment pipeline.
+
+Four canonical phases bracket where each run's wall-clock goes:
+
+- ``learn``     — knowledge-base construction (``learn_window``);
+- ``provision`` — scenario materialisation + policy construction;
+- ``decide``    — policy decisions (per-slot on the host engines; the
+  fused device scan on the scan path, ``block_until_ready``-bracketed);
+- ``execute``   — progress/energy accounting and bookkeeping.
+
+Timers use ``perf_counter`` and cost one branch per slot when attached;
+the engines skip them entirely when no profiler is threaded.  Device
+work is synchronised before a bracket closes (:meth:`sync`) so scan
+timings measure compute, not dispatch.  Set ``jax_trace_dir`` to also
+export a ``jax.profiler`` trace around whatever :meth:`jax_trace`
+wraps (off by default — the flag exists so deep dives don't need code
+edits)."""
+from __future__ import annotations
+
+import contextlib
+import time
+
+PHASES = ("learn", "provision", "decide", "execute")
+
+
+class PhaseProfiler:
+    """Accumulates wall-clock seconds (and bracket counts) per phase."""
+
+    def __init__(self, jax_trace_dir: str | None = None) -> None:
+        self.seconds: dict[str, float] = {}
+        self.calls: dict[str, int] = {}
+        self.jax_trace_dir = jax_trace_dir
+
+    def add(self, phase: str, dt: float) -> None:
+        self.seconds[phase] = self.seconds.get(phase, 0.0) + dt
+        self.calls[phase] = self.calls.get(phase, 0) + 1
+
+    @contextlib.contextmanager
+    def phase(self, name: str, sync=None):
+        """Bracket a phase; ``sync`` (any jax pytree) is
+        ``block_until_ready``-ed before the timer stops."""
+        t = time.perf_counter()
+        try:
+            yield
+        finally:
+            if sync is not None:
+                self.sync(sync)
+            self.add(name, time.perf_counter() - t)
+
+    @staticmethod
+    def sync(tree) -> None:
+        """Block until device work in ``tree`` has finished (no-op when
+        jax is unavailable or the tree holds no device arrays)."""
+        try:
+            import jax
+        except ImportError:          # pragma: no cover - jax is baked in
+            return
+        jax.block_until_ready(tree)
+
+    @contextlib.contextmanager
+    def jax_trace(self):
+        """Export a ``jax.profiler`` trace around the wrapped block when
+        ``jax_trace_dir`` is set; a plain passthrough otherwise."""
+        if not self.jax_trace_dir:
+            yield
+            return
+        import jax
+        with jax.profiler.trace(self.jax_trace_dir):
+            yield
+
+    def total(self) -> float:
+        return sum(self.seconds.values())
+
+    def summary(self) -> dict:
+        """Per-phase seconds/calls/share, canonical phases first."""
+        order = [p for p in PHASES if p in self.seconds]
+        order += [p for p in self.seconds if p not in PHASES]
+        tot = self.total()
+        return {p: {"seconds": self.seconds[p], "calls": self.calls[p],
+                    "share": self.seconds[p] / tot if tot > 0 else 0.0}
+                for p in order}
+
+    def table(self) -> str:
+        rows = ["phase        seconds   share  brackets"]
+        for p, d in self.summary().items():
+            rows.append(f"{p:<10} {d['seconds']:>9.4f} {d['share']:>6.1%}"
+                        f" {d['calls']:>9d}")
+        return "\n".join(rows)

@@ -113,6 +113,25 @@ def test_golden_sweeps_byte_identical_with_scan_engine():
         assert sw.run().to_json() + "\n" == want, path
 
 
+def test_golden_sweeps_byte_identical_with_recorder_attached():
+    """ISSUE-9: trace recording is observation-only, so running the
+    batch, DAG and serving golden grids with a recorder *and* profiler
+    attached must still reproduce the checked-in JSON byte-for-byte —
+    while actually recording events (an empty stream would make the
+    identity vacuous)."""
+    from repro.telemetry import MemoryRecorder, PhaseProfiler, Telemetry
+
+    for path, mk in ((FIXTURE, golden_sweep), (FIXTURE_DAG, golden_dag_sweep),
+                     (FIXTURE_SERVING, golden_serving_sweep)):
+        with open(path) as f:
+            want = f.read()
+        tel = Telemetry(recorder=MemoryRecorder(), profiler=PhaseProfiler())
+        sw = dataclasses.replace(mk(), telemetry=tel)
+        assert sw.run().to_json() + "\n" == want, path
+        assert len(tel.recorder) > 0, path
+        assert tel.profiler.total() > 0, path
+
+
 def test_dag_fixture_shape_sanity():
     with open(FIXTURE_DAG) as f:
         want = json.load(f)
