@@ -24,6 +24,10 @@ perf trajectory is tracked across PRs:
                       gating overhead of the vector path against the
                       independent-job vector path at equal task count
                       (acceptance: within 2x);
+- ``mpc``           — the receding-horizon execution phase (ISSUE-10):
+                      scalar vs vector vs the scan-native ``mpc`` /
+                      ``mpc-scale`` programs on one evaluation week,
+                      three-way parity asserted while timing;
 - ``scan``          — the scan-fused engine (jitted lax.scan slot loop):
                       scalar vs vector vs scan on the geo-flex and
                       dag-carbon headline workloads (three-way parity
@@ -398,6 +402,46 @@ def bench_scan(full: bool = False, smoke: bool = False) -> dict:
     return out
 
 
+def bench_mpc(full: bool = False, smoke: bool = False) -> dict:
+    """Receding-horizon execution phase (ISSUE-10): scalar vs vector vs
+    the scan-native ``mpc``/``mpc-scale`` programs on one evaluation week.
+    The vector path walks the precomputed decision tables per slot in
+    Python; the scan path consumes them inside the jitted slot loop.
+    Three-way parity is asserted while timing; ``run_and_report`` fails
+    the run if the scan-native program falls below the vector path."""
+    from repro.experiment import make_policy, prepare_context
+
+    cap = 150 if full else 16 if smoke else 60
+    mat = Scenario(region="south-australia", capacity=cap, learn_weeks=1,
+                   seed=7).materialize()
+    names = ("carbonflex-mpc", "carbonflex-scale")
+    ctx = prepare_context(mat, names)
+    out = {}
+    for name in names:
+        mk = lambda n=name: make_policy(n, ctx)  # noqa: E731
+        for eng in ("vector", "scan"):           # warm pack + jit caches
+            simulate(mat.eval_jobs, mat.ci, mat.cluster, mk(), t0=mat.t0,
+                     horizon=WEEK, engine=eng)
+        times, results = {}, {}
+        for eng, reps in (("scalar", 1), ("vector", 3), ("scan", 3)):
+            times[eng], results[eng] = _timed(
+                lambda m=mk, e=eng: simulate(mat.eval_jobs, mat.ci,
+                                             mat.cluster, m(), t0=mat.t0,
+                                             horizon=WEEK, engine=e),
+                repeats=reps)
+        assert results["scalar"].carbon_g == results["vector"].carbon_g \
+            == results["scan"].carbon_g      # three-way parity while timing
+        out[name] = {
+            "scalar_s": round(times["scalar"], 3),
+            "vector_s": round(times["vector"], 4),
+            "scan_s": round(times["scan"], 4),
+            "speedup_vs_scalar": round(times["scalar"] / times["scan"], 1),
+            "speedup_vs_vector": round(times["vector"] / times["scan"], 2),
+        }
+    out["eval_jobs"] = len(mat.eval_jobs)
+    return out
+
+
 def bench_telemetry(full: bool = False, smoke: bool = False) -> dict:
     """Trace-recording overhead on the scan path (ISSUE-9 acceptance:
     attaching a MemoryRecorder must stay within 1.3x of the bare run,
@@ -451,6 +495,7 @@ def run_all(full: bool = False, smoke: bool = False) -> dict:
                                                  offsets),
         "geo": bench_geo(full, smoke),
         "dag": bench_dag(full, smoke),
+        "mpc": bench_mpc(full, smoke),
         "scan": bench_scan(full, smoke),
         "telemetry": bench_telemetry(full, smoke),
     }
@@ -486,6 +531,11 @@ def csv_rows(res: dict) -> list[str]:
                 f"{res['dag']['independent_vector_s'] * 1e6:.0f},"
                 f"overhead_per_slot={res['dag']['gating_overhead_x']}x"
                 f";tasks={res['dag']['tasks']}")
+    for pol, d in res["mpc"].items():
+        if isinstance(d, dict):
+            rows.append(f"bench_engine/mpc/{pol},{d['scan_s'] * 1e6:.0f},"
+                        f"vs_scalar={d['speedup_vs_scalar']}x"
+                        f";vs_vector={d['speedup_vs_vector']}x")
     for wl in ("geo-flex", "dag-carbon"):
         d = res["scan"][wl]
         rows.append(f"bench_engine/scan/{wl},{d['scan_s'] * 1e6:.0f},"
@@ -513,6 +563,14 @@ def run_and_report(out_path: str | None = None, full: bool = False,
         assert d["scan_s"] <= d["vector_s"], (
             f"scan engine regressed below the vector path on {wl}: "
             f"scan {d['scan_s']}s vs vector {d['vector_s']}s")
+    # carbonflex-scale is exempt: its heterogeneous k requests force the
+    # sequential walk fill (no uniform cumsum), so the per-case vector
+    # path stays competitive — the scan program earns its keep in
+    # vmapped sweeps, not solo runs (see EXPERIMENTS.md §Forecast).
+    d = res["mpc"]["carbonflex-mpc"]
+    assert d["scan_s"] <= d["vector_s"], (
+        f"scan-native MPC program regressed below the vector path: "
+        f"scan {d['scan_s']}s vs vector {d['vector_s']}s")
     tele_x = res["telemetry"]["scan"]["overhead_x"]
     assert tele_x <= 1.3, (
         f"scan-path trace recording costs {tele_x}x vs telemetry off; "

@@ -7,6 +7,10 @@ Public surface:
 - ``provisioning.provision``       — Algorithm 2 (phi)
 - ``scheduling.schedule``          — Algorithm 3 (psi)
 - ``policy.CarbonFlexPolicy``      — the runtime resource manager
+- ``mpc.CarbonFlexMPCPolicy``      — receding-horizon execution planner
+                                     (+ ``CarbonFlexScalePolicy`` marginal-
+                                     capacity scale-up, ``oracle-estimated``
+                                     oracle on learned lengths)
 - ``policy.learn_window``          — the continuous-learning phase
 - ``simulator.simulate``           — the CarbonFlex-Simulator engine
                                      (vectorised; ``engine="scalar"`` for
@@ -40,7 +44,7 @@ Public surface:
 The declarative experiment layer (policy registry, ``Scenario``, ``run``,
 ``Sweep``) lives one level up in ``repro.experiment``.
 """
-from . import baselines, carbon, dag, emissions, faults, forecast, geo, knowledge, oracle, policy, profiles, provisioning, scheduling, simulator, types  # noqa: F401
+from . import baselines, carbon, dag, emissions, faults, forecast, geo, knowledge, mpc, oracle, policy, profiles, provisioning, scheduling, simulator, types  # noqa: F401
 from .carbon import CarbonService, MultiRegionCarbonService, synthesize_trace  # noqa: F401
 from .dag import (DagCapPolicy, DagCarbonPolicy, DagFcfsPolicy, DagSpec,  # noqa: F401
                   TaskNode, criticality_from_jobs, expand_dags)
@@ -54,6 +58,8 @@ from .forecast import (ForecastModel, NoisyForecast, PerfectForecast,  # noqa: F
                        forecast_label, forecast_to_dict)
 from .geo import GeoFlexPolicy, GeoGreedyPolicy, GeoPolicy, GeoStaticPolicy  # noqa: F401
 from .knowledge import KnowledgeBase  # noqa: F401
+from .mpc import (CarbonFlexMPCPolicy, CarbonFlexScalePolicy,  # noqa: F401
+                  EstimatedOraclePolicy, MPCConfig)
 from .policy import (CarbonFlexPolicy, LearnOutcome, OraclePolicy, Policy,  # noqa: F401
                      learn_window)
 from .simulator import FaultModel, SimCase, simulate, simulate_many  # noqa: F401

@@ -267,6 +267,14 @@ class KnowledgeBase:
             self._rebuild()
         return len(self._X)
 
+    def rho_values(self) -> np.ndarray:
+        """All stored oracle rho decisions (the learned marginal-capacity
+        curve's samples) — ``carbonflex-scale`` derives its scale-up
+        threshold from their median (core/mpc.py)."""
+        if self._dirty:
+            self._rebuild()
+        return self._Y[:, 1] if len(self._X) else np.zeros(0)
+
     # --- execution-phase API ------------------------------------------------
 
     def _prepare(self, state: np.ndarray, k: int | None):

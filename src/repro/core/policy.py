@@ -244,85 +244,18 @@ class CarbonFlexPolicy:
         self._recent.append(violated)
 
 
-@dataclasses.dataclass
-class CarbonFlexMPCPolicy:
-    """Beyond-paper variant: rolling re-simulation of the oracle.
+# The receding-horizon execution phase (``carbonflex-mpc`` /
+# ``carbonflex-scale`` / ``oracle-estimated``) lives in ``core/mpc.py``;
+# re-exported here because this module is the historical home of the MPC
+# policy and existing call sites import it from ``repro.core.policy``.
+from .mpc import (CarbonFlexMPCPolicy, CarbonFlexScalePolicy,  # noqa: E402
+                  EstimatedOraclePolicy, MPCConfig)
 
-    The paper's learning phase *simulates Algorithm 1 over past windows*
-    and mimics it via a KNN case base.  This policy instead re-runs
-    Algorithm 1 every slot over the live jobs and the day-ahead CI forecast
-    (tiled beyond 24 h), substituting the unknown job lengths with the
-    historically-learned per-queue mean of delivered work — exactly the
-    information the paper grants its baselines (§6.1 "all baselines ...
-    can use the mean job length").  It uses no future knowledge beyond the
-    CI forecast the paper already assumes.  See EXPERIMENTS.md §Perf for
-    the KNN-vs-MPC comparison.
-    """
-
-    lookahead: int = 72
-    name: str = "carbonflex-mpc"
-    prior_mean: float = 6.0            # initial length estimate (slots)
-    history_cap: int = 512
-    percentile: float = 75.0           # conditional-remaining percentile
-    slack_margin: float = 0.3          # slack reserved against underestimates
-
-    def on_window_start(self, ci, t0, horizon, jobs, cluster) -> None:
-        nq = len(cluster.queues)
-        if not hasattr(self, "_hist") or self._hist is None:
-            self._hist: list[list[float]] = [[self.prior_mean] for _ in range(nq)]
-
-    def warm_start(self, historical_jobs) -> None:
-        """Seed the per-queue length histories from completed historical
-        jobs (the same logs the learning phase replays)."""
-        if not hasattr(self, "_hist") or self._hist is None:
-            nq = max(j.queue for j in historical_jobs) + 1
-            self._hist = [[self.prior_mean] for _ in range(nq)]
-        for j in historical_jobs:
-            h = self._hist[j.queue]
-            h.append(float(j.length))
-            if len(h) > self.history_cap:
-                del h[0]
-
-    def _est_remaining(self, q: int, done: float) -> float:
-        """Conditional remaining work from the per-queue empirical length
-        distribution: percentile of {L | L > done} minus done.  A plain
-        mean under-schedules long jobs and blows their deadlines; the
-        conditional percentile is robust to the heavy tail."""
-        hist = np.asarray(self._hist[q])
-        longer = hist[hist > done]
-        if len(longer) == 0:
-            # beyond the longest seen: assume another mean-chunk remains
-            return max(float(hist.mean()) * 0.5, 0.5)
-        return max(float(np.percentile(longer, self.percentile) - done), 0.5)
-
-    def decide(self, t, active, ci: CarbonService, cluster: ClusterConfig):
-        live = [a for a in active if not a.done]
-        if not live:
-            return 0, {}
-        fc = ci.forecast_extended(t, self.lookahead)
-        plan_jobs = []
-        for a in live:
-            done = a.job.length - a.remaining
-            est_rem = self._est_remaining(a.job.queue, done)
-            # Reserve a fraction of the slack against length underestimates.
-            d_plan = max(int(max(a.slack_left, 0) - np.ceil(self.slack_margin * est_rem)), 0)
-            plan_jobs.append(dataclasses.replace(
-                a.job, arrival=0, length=est_rem, delay=d_plan))
-        res = oracle.solve(plan_jobs, fc, cluster.capacity,
-                           horizon=self.lookahead, backend="numpy",
-                           max_extensions=2, extension_slots=self.lookahead)
-        alloc = {}
-        for i, a in enumerate(live):
-            k = int(res.schedule.alloc[i, 0])
-            if k > 0:
-                alloc[a.job.job_id] = k
-        return int(sum(alloc.values())), alloc
-
-    def on_completion(self, t, job, violated) -> None:
-        h = self._hist[job.job.queue]
-        h.append(float(job.job.length))
-        if len(h) > self.history_cap:
-            del h[0]
+__all__ = [
+    "CarbonFlexMPCPolicy", "CarbonFlexPolicy", "CarbonFlexScalePolicy",
+    "EstimatedOraclePolicy", "LearnOutcome", "MPCConfig", "OraclePolicy",
+    "Policy", "learn_window",
+]
 
 
 @dataclasses.dataclass

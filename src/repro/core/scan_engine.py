@@ -51,6 +51,12 @@ Natively scanned (exact policy types, ``faults is None``):
 - single-region: ``carbon-agnostic``, ``dag-fcfs``, ``wait-awhile``,
   ``wait-awhile-robust``, ``dag-carbon``, ``dag-cap`` (the
   threshold-fill family — FCFS at ``k_min`` under an eligibility mask);
+- MPC: ``carbonflex-mpc`` / ``carbonflex-scale`` (``core/mpc.py``) — the
+  receding-horizon rule consumes its host-precomputed rank/need/clean
+  tables as per-slot xs and row constants, so the whole horizon search
+  runs inside the scan step as integer gathers; the scale variant's
+  per-slot allocations ride back in a ``scaled`` boolean grid that the
+  host energy replay resolves to per-cell k;
 - geo: ``geo-static``, ``geo-greedy``, ``geo-flex``.
 
 Everything else (host-stateful planners like gaia/carbonscaler/
@@ -66,6 +72,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import logging
 import time
 from typing import Callable, Sequence
 
@@ -83,10 +90,12 @@ from .carbon import CarbonService, MultiRegionCarbonService
 from .dag import DagCapPolicy, DagCarbonPolicy, DagFcfsPolicy
 from .forecast import PerfectForecast, QuantileCIView
 from .geo import GeoFlexPolicy, GeoGreedyPolicy, GeoStaticPolicy
+from .mpc import CarbonFlexMPCPolicy, CarbonFlexScalePolicy
 from .types import GeoCluster, SimResult, SlotLog
 from ..telemetry import Telemetry
 
 _EPS = 1e-9
+_log = logging.getLogger(__name__)
 _BIG_T = np.int64(2 ** 62)     # arrival sentinel for padding rows
 ROW_PAD = 256                  # row-count bucket (bounds jit recompiles)
 EDGE_PAD = 256
@@ -98,7 +107,8 @@ BATCH_TILE = 64                # vmapped cells per dispatch (memory bound)
 
 # --- native-policy detection -------------------------------------------------
 
-_SINGLE_KINDS = {"plain", "thresh", "cap"}
+_MPC_KINDS = {"mpc", "mpc-scale"}
+_SINGLE_KINDS = {"plain", "thresh", "cap"} | _MPC_KINDS
 
 
 def native_kind(policy, cluster, faults) -> str | None:
@@ -106,7 +116,9 @@ def native_kind(policy, cluster, faults) -> str | None:
 
     Exact ``type()`` checks: a subclass may override ``decide`` in ways
     the packed decision tables cannot see, so only the known closed set
-    runs natively.  Any fault process delegates (host RNG mid-slot).
+    runs natively (``carbonflex-scale`` is checked before its base MPC
+    class for the same reason).  Any fault process delegates (host RNG
+    mid-slot).
     """
     if faults is not None:
         return None
@@ -120,6 +132,10 @@ def native_kind(policy, cluster, faults) -> str | None:
         return "thresh"
     if tp is DagCapPolicy:
         return "cap"
+    if tp is CarbonFlexScalePolicy:
+        return "mpc-scale"
+    if tp is CarbonFlexMPCPolicy:
+        return "mpc"
     return None
 
 
@@ -209,12 +225,15 @@ class _SingleProgram:
     consts: dict                   # jnp arrays / 0-d scalars
     carry0: dict
     n_pad: int
+    kind: str                      # plain | thresh | cap | mpc | mpc-scale
     uniform: bool                  # all k_min equal -> cumsum fill
     deps: str                      # none | gather | scatter (gating form)
-    elig_fn: Callable              # (ts: np.ndarray) -> np.bool_ (S,)
+    xs_fn: Callable                # (ts: np.ndarray) -> host per-slot tables
+    xs_dims: tuple                 # xs table shapes (part of the batch key)
     # host accounting mirrors
     power: np.ndarray
     m_t: int
+    k_up: np.ndarray | None = None     # mpc-scale: per-row clean-slot k
 
 
 def _single_elig_fn(policy, ci_pol, kind: str) -> Callable:
@@ -319,6 +338,21 @@ def _build_single(packed, cluster, policy, ci_pol, kind: str,
             dep_consts["parents"] = parents
             dep_consts["children"] = children
 
+    k_up = None
+    mpc_consts: dict = {}
+    if kind in _MPC_KINDS:
+        # the MPC rule's row constants: static job length (``remaining``
+        # in the carry decays, done-work needs the original), queue ids
+        # for the need-LUT gather, and the learned need LUT itself
+        mpc_consts["length_c"] = padded(packed.length, 0.0, f64)
+        mpc_consts["queue"] = padded(packed.queue, 0, i64)
+        mpc_consts["need_lut"] = policy.scan_tables()["need_lut"]
+        if kind == "mpc-scale":
+            k_up = np.asarray(policy._k_up, dtype=i64)
+            mpc_consts["k_scale"] = padded(k_up, 1, i64)
+            mpc_consts["thr_up"] = padded(
+                packed.thr_tab[np.arange(n), k_up], 1.0, f64)
+
     # one device_put for the whole tree (per-array jnp.asarray dispatch
     # was a measurable share of short runs)
     consts = jax.device_put(dict(
@@ -332,6 +366,7 @@ def _build_single(packed, cluster, policy, ci_pol, kind: str,
         n_real=i64(n),
         t_end=i64(t0 + horizon),
         **dep_consts,
+        **mpc_consts,
     ))
     carry0 = jax.device_put(dict(
         remaining=padded(packed.length, 0.0, f64),
@@ -344,14 +379,36 @@ def _build_single(packed, cluster, policy, ci_pol, kind: str,
         pending=np.zeros(n_pad, dtype=bool),
         ended=np.asarray(False),
     ))
-    uniform = bool(n > 0 and (kmin == kmin[0]).all())
+    if kind in _MPC_KINDS:
+        # per-slot tables of the MPC rule, straight from the policy's own
+        # host-precomputed arrays (bit-parity by construction)
+        def xs_fn(ts: np.ndarray) -> dict:
+            xs = {"t": ts.astype(i64),
+                  "rank_t": policy.rank_rows(ts).astype(i64)}
+            if kind == "mpc-scale":
+                xs["clean_t"] = policy.clean_rows(ts)
+            return xs
+
+        xs_dims = (int(policy.cfg.horizon), mpc_consts["need_lut"].shape)
+    else:
+        elig = _single_elig_fn(policy, ci_pol, kind)
+
+        def xs_fn(ts: np.ndarray) -> dict:
+            return {"t": ts.astype(i64), "elig_t": elig(ts)}
+
+        xs_dims = ()
+
+    # per-slot scale-up makes the requested k slot-varying -> the cumsum
+    # fill's uniform-k premise no longer holds
+    uniform = bool(n > 0 and (kmin == kmin[0]).all()
+                   and kind != "mpc-scale")
     return _SingleProgram(
-        consts=consts, carry0=carry0, n_pad=n_pad, uniform=uniform,
-        deps=deps, elig_fn=_single_elig_fn(policy, ci_pol, kind),
-        power=power, m_t=int(cluster.capacity))
+        consts=consts, carry0=carry0, n_pad=n_pad, kind=kind,
+        uniform=uniform, deps=deps, xs_fn=xs_fn, xs_dims=xs_dims,
+        power=power, m_t=int(cluster.capacity), k_up=k_up)
 
 
-def _single_step(consts, carry, x, *, uniform: bool, deps: str):
+def _single_step(consts, carry, x, *, kind: str, uniform: bool, deps: str):
     """One engine slot (mirrors ``_simulate_vector``'s loop body)."""
     t = x["t"]
     rem = carry["remaining"]
@@ -385,9 +442,25 @@ def _single_step(consts, carry, x, *, uniform: bool, deps: str):
     # sorted, so forced-then-unforced in row order IS the FCFS key)
     forced = slack <= 0
     live = rem > _EPS
-    cand = act & live & (forced | x["elig_t"] | consts["elig_row"])
     kmin = consts["kmin"]
     m_cap = consts["m_cap"]
+    if kind in _MPC_KINDS:
+        # MPC eligibility: current slot among the job's estimated-need
+        # cheapest within its feasible window (CarbonFlexMPCPolicy.decide
+        # — same tables, same integer logic)
+        didx = jnp.clip(jnp.floor(consts["length_c"] - rem)
+                        .astype(jnp.int64), 0,
+                        consts["need_lut"].shape[1] - 1)
+        need = consts["need_lut"][consts["queue"], didx]
+        w = jnp.clip(slack + need, 1, x["rank_t"].shape[-1])
+        cand = act & live & (forced | (x["rank_t"][w - 1] < need))
+    else:
+        cand = act & live & (forced | x["elig_t"] | consts["elig_row"])
+    if kind == "mpc-scale":
+        # clean-window scale-up: unforced rows request the learned k_up
+        kreq = jnp.where(forced | ~x["clean_t"], kmin, consts["k_scale"])
+    else:
+        kreq = kmin
     if uniform:
         # uniform k: "continue" fill == rank-prefix per group
         k0 = kmin[0]
@@ -404,8 +477,8 @@ def _single_step(consts, carry, x, *, uniform: bool, deps: str):
         order = jnp.argsort(key, stable=True)
 
         def fill(used, row):
-            ok = cand[row] & (used + kmin[row] <= m_cap)
-            return used + jnp.where(ok, kmin[row], 0), ok
+            ok = cand[row] & (used + kreq[row] <= m_cap)
+            return used + jnp.where(ok, kreq[row], 0), ok
 
         # unroll: the fill body is a handful of scalar ops, so XLA:CPU's
         # per-iteration while-loop dispatch dominates — unrolling trades
@@ -415,7 +488,12 @@ def _single_step(consts, carry, x, *, uniform: bool, deps: str):
         take = jnp.zeros_like(cand).at[order].set(take_o)
 
     # progress (energy + frac replay host-side from take; see module doc)
-    rem2 = jnp.where(take, rem - consts["thr"], rem)
+    if kind == "mpc-scale":
+        scaled = take & (kreq > kmin)
+        rem2 = jnp.where(take, rem - jnp.where(scaled, consts["thr_up"],
+                                               consts["thr"]), rem)
+    else:
+        rem2 = jnp.where(take, rem - consts["thr"], rem)
     wmask = act & live & ~take
     slack2 = jnp.where(wmask, slack - 1, slack)
     waited2 = jnp.where(wmask, waited + 1, waited)
@@ -446,21 +524,24 @@ def _single_step(consts, carry, x, *, uniform: bool, deps: str):
     ys = dict(take=take, fin=fin, viol=viol,
               waited_fin=waited_fin.astype(jnp.int32),
               n_rows=n_in.astype(jnp.int32), ended=ended)
+    if kind == "mpc-scale":
+        ys["scaled"] = scaled
     return carry2, ys
 
 
-@functools.partial(jax.jit, static_argnames=("uniform", "deps"))
-def _single_chunk(consts, carry, xs, uniform: bool, deps: str):
-    step = functools.partial(_single_step, consts, uniform=uniform,
-                             deps=deps)
+@functools.partial(jax.jit, static_argnames=("kind", "uniform", "deps"))
+def _single_chunk(consts, carry, xs, kind: str, uniform: bool, deps: str):
+    step = functools.partial(_single_step, consts, kind=kind,
+                             uniform=uniform, deps=deps)
     return lax.scan(lambda c, x: step(c, x), carry, xs)
 
 
-@functools.partial(jax.jit, static_argnames=("uniform", "deps"))
-def _single_chunk_batch(consts, carry, xs, uniform: bool, deps: str):
+@functools.partial(jax.jit, static_argnames=("kind", "uniform", "deps"))
+def _single_chunk_batch(consts, carry, xs, kind: str, uniform: bool,
+                        deps: str):
     def one(c, ca, x):
-        step = functools.partial(_single_step, c, uniform=uniform,
-                                 deps=deps)
+        step = functools.partial(_single_step, c, kind=kind,
+                                 uniform=uniform, deps=deps)
         return lax.scan(lambda cc, xx: step(cc, xx), ca, x)
 
     return jax.vmap(one)(consts, carry, xs)
@@ -969,6 +1050,33 @@ def _active_energy(packed, power, slot_h, eta, take_a):
     return bounds, r_idx, k, e
 
 
+def _active_energy_cells(packed, power, slot_h, eta, take_a, k_rows):
+    """``_active_energy`` for slot-varying allocations (mpc-scale).
+
+    ``k_rows`` is the (S, n) grid of the allocation each take cell ran
+    at; throughput is gathered per cell (``thr_tab[row, k]``) and the
+    replay performs the identical per-slot scalar arithmetic the vector
+    engine's allocated-k path does — bitwise equal by the same argument
+    as the k_min replay above."""
+    s_idx, r_idx = np.nonzero(take_a)
+    bounds = np.searchsorted(s_idx, np.arange(take_a.shape[0] + 1))
+    k = k_rows[s_idx, r_idx]
+    thr = packed.thr_tab[r_idx, k]
+    thr_guard = np.maximum(thr, 1e-9)
+    rem = packed.length.astype(np.float64, copy=True)
+    frac = np.empty(len(r_idx))
+    for i in range(take_a.shape[0]):
+        lo, hi = bounds[i], bounds[i + 1]
+        rows = r_idx[lo:hi]
+        frac[lo:hi] = np.minimum(1.0, rem[rows] / thr_guard[lo:hi])
+        rem[rows] -= thr[lo:hi]
+    e_comp = k * power[r_idx] * slot_h * frac
+    ring = np.where(k <= 1, 0.0, 2.0 * (k - 1) / np.maximum(k, 1))
+    gbits = packed.comm[r_idx] * 8.0 * ring * k * frac
+    e = e_comp + eta * gbits / 3600.0 / 1000.0 * slot_h
+    return bounds, r_idx, k, e
+
+
 def _collect_chunks(prog_consts, carry, chunk_fn, xs_builder, t0: int,
                     t_mid: int, t_hard: int) -> tuple[dict, int]:
     """Run device chunks until the case ends or t_hard; returns stacked
@@ -1005,11 +1113,11 @@ def _run_single_native(packed, ci, ci_pol, cluster, policy, t0, horizon,
     t_hard = t0 + horizon + max_overrun
 
     def xs_builder(ts):
-        return jax.device_put({"t": ts.astype(np.int64),
-                               "elig_t": prog.elig_fn(ts)})
+        return jax.device_put(prog.xs_fn(ts))
 
     def chunk_fn(consts, carry, xs):
-        return _single_chunk(consts, carry, xs, prog.uniform, prog.deps)
+        return _single_chunk(consts, carry, xs, prog.kind, prog.uniform,
+                             prog.deps)
 
     prof = telemetry.profiler if telemetry is not None else None
     if prof is not None:
@@ -1097,8 +1205,14 @@ def _account_single(packed, ci, ci_pol, cluster, policy, t0, ys, n_valid,
     total_energy = 0.0
     total_carbon = 0.0
     take_a = ys["take"][:n_valid, :n]
-    bounds, r_idx, k_act, e_act = _active_energy(packed, prog.power, slot_h,
-                                                 eta, take_a)
+    if prog.kind == "mpc-scale":
+        k_rows = np.where(np.asarray(ys["scaled"][:n_valid, :n], dtype=bool),
+                          prog.k_up[None, :], packed.k_min[None, :])
+        bounds, r_idx, k_act, e_act = _active_energy_cells(
+            packed, prog.power, slot_h, eta, take_a, k_rows)
+    else:
+        bounds, r_idx, k_act, e_act = _active_energy(packed, prog.power,
+                                                     slot_h, eta, take_a)
     fs, fr = np.nonzero(ys["fin"][:n_valid, :n])
     fbounds = np.searchsorted(fs, np.arange(n_valid + 1))
     wfin_f = ys["waited_fin"][:n_valid, :n][fs, fr]
@@ -1300,6 +1414,12 @@ def simulate_scan(jobs, ci, cluster, policy, t0: int = 0,
     if packed is None:
         packed = _packed_for(jobs)
     kind = native_kind(policy, cluster, faults)
+    if (kind == "mpc-scale" and telemetry is not None
+            and telemetry.recorder is not None):
+        # _scan_slot_events derives resume/suspend assuming k == k_min
+        # (no scale events); event-recorded scale runs use the vector
+        # engine, whose tracker sees the true per-slot allocations
+        kind = None
     if kind is None or packed.n == 0 or (packed.has_deps
                                          and isinstance(cluster, GeoCluster)):
         if isinstance(cluster, GeoCluster):
@@ -1334,13 +1454,21 @@ def simulate_many_scan(cases: Sequence) -> list[SimResult]:
 
     results: list[SimResult | None] = [None] * len(cases)
     groups: dict[tuple, list[tuple[int, object, object, _SingleProgram]]] = {}
+    delegated: dict[str, int] = {}
     with enable_x64():
         for i, case in enumerate(cases):
             packed = _packed_for(case.jobs)
             telemetry = getattr(case, "telemetry", None)
             kind = native_kind(case.policy, case.cluster, case.faults)
+            if (kind == "mpc-scale" and telemetry is not None
+                    and telemetry.recorder is not None):
+                kind = None     # see simulate_scan: scale events
             if kind is None or packed.n == 0 or (
                     packed.has_deps and isinstance(case.cluster, GeoCluster)):
+                if packed.n > 0:
+                    who = (getattr(case, "label", "")
+                           or type(case.policy).__name__)
+                    delegated[who] = delegated.get(who, 0) + 1
                 fn = (_simulate_geo_vector
                       if isinstance(case.cluster, GeoCluster)
                       else _simulate_vector)
@@ -1367,12 +1495,19 @@ def simulate_many_scan(cases: Sequence) -> list[SimResult]:
                        if prog.deps == "gather"
                        else prog.consts["parents"].shape[0]
                        if prog.deps == "scatter" else 0)
-            key = (prog.n_pad, prog.deps, int(dep_dim), prog.uniform,
-                   horizon, horizon + case.max_overrun)
+            key = (prog.n_pad, prog.kind, prog.xs_dims, prog.deps,
+                   int(dep_dim), prog.uniform, horizon,
+                   horizon + case.max_overrun)
             groups.setdefault(key, []).append((i, case, packed, prog, ci_pol))
         for key, members in groups.items():
             for lo in range(0, len(members), BATCH_TILE):
                 _run_single_tile(members[lo:lo + BATCH_TILE], results)
+    if delegated:
+        # once per batch, not per case: sweeps that think they run on the
+        # scan engine should know which cases silently fell back
+        _log.info("scan batch: %d case(s) delegated to the vector engine "
+                  "(%s)", sum(delegated.values()),
+                  ", ".join(f"{k} x{v}" for k, v in sorted(delegated.items())))
     return results  # type: ignore[return-value]
 
 
@@ -1385,11 +1520,10 @@ def _run_single_tile(members, results) -> None:
         t_hard = case.t0 + horizon + case.max_overrun
 
         def xs_builder(ts):
-            return jax.device_put({"t": ts.astype(np.int64),
-                                   "elig_t": prog.elig_fn(ts)})
+            return jax.device_put(prog.xs_fn(ts))
 
         def chunk_fn(consts, carry, xs):
-            return _single_chunk(consts, carry, xs, prog.uniform,
+            return _single_chunk(consts, carry, xs, prog.kind, prog.uniform,
                                  prog.deps)
 
         telemetry = getattr(case, "telemetry", None)
@@ -1406,6 +1540,7 @@ def _run_single_tile(members, results) -> None:
                                      telemetry=telemetry)
         return
 
+    kind_b = members[0][3].kind
     uniform = members[0][3].uniform
     deps = members[0][3].deps
     consts = {k: jnp.stack([m[3].consts[k] for m in members])
@@ -1421,13 +1556,12 @@ def _run_single_tile(members, results) -> None:
     _dev_t0 = time.perf_counter()
     while off < span:
         size = min(CHUNK if off < horizon_b else OVERRUN_CHUNK, span - off)
-        ts_b = np.stack([np.arange(m[1].t0 + off, m[1].t0 + off + size)
-                         for m in members])
-        elig_b = np.stack([m[3].elig_fn(ts_b[j])
-                           for j, m in enumerate(members)])
-        xs = {"t": jnp.asarray(ts_b.astype(np.int64)),
-              "elig_t": jnp.asarray(elig_b)}
-        carry, ys = _single_chunk_batch(consts, carry, xs, uniform, deps)
+        xs_host = [m[3].xs_fn(np.arange(m[1].t0 + off, m[1].t0 + off + size))
+                   for m in members]
+        xs = {k: jnp.asarray(np.stack([d[k] for d in xs_host]))
+              for k in xs_host[0]}
+        carry, ys = _single_chunk_batch(consts, carry, xs, kind_b, uniform,
+                                        deps)
         ys_parts.append(jax.device_get(ys))
         off += size
         if bool(np.asarray(carry["ended"]).all()):

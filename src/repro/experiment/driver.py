@@ -70,7 +70,7 @@ def prepare_context(
         cluster=mat.cluster, ci=mat.ci, history=list(mat.hist),
         mean_length=mat.mean_length, utilization=mat.scenario.utilization,
         kb=kb, backend=backend, mci=mat.mci, geo=mat.geo,
-        forecast_quantile=forecast_quantile)
+        forecast_quantile=forecast_quantile, mpc=mat.scenario.mpc)
 
 
 def _fresh_faults(scenario: Scenario):

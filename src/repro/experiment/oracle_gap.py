@@ -44,10 +44,12 @@ from .scenario import Scenario
 from .sweep import Sweep
 
 #: Policies whose oracle gap the §Forecast study tracks: the learned
-#: CarbonFlex pipeline and the threshold baseline, each with its
+#: CarbonFlex pipeline (greedy, MPC, and marginal-capacity scale-up
+#: variants) and the threshold baseline, each side with its
 #: quantile-robust variant.
 DEFAULT_GAP_POLICIES: tuple[str, ...] = (
-    "carbonflex", "carbonflex-robust", "wait-awhile", "wait-awhile-robust",
+    "carbonflex", "carbonflex-mpc", "carbonflex-scale",
+    "carbonflex-robust", "wait-awhile", "wait-awhile-robust",
 )
 
 
@@ -79,12 +81,29 @@ class OracleGap:
     backend: str = "numpy"
     # quantile the *-robust policy variants threshold on
     forecast_quantile: float = 0.7
+    # Simulation engine for the grid.  The study defaults to "scan" so the
+    # scan-native policies (carbonflex-mpc / carbonflex-scale / the
+    # threshold baselines) fuse into vmapped device programs; cells that
+    # are not scan-native (the oracles, carbonflex itself) delegate to the
+    # vector engine, which the scan batch logs once per dispatch.
+    engine: str = "scan"
+    # ISSUE 10 S1: also run the oracle on the *learned* length estimates
+    # ("oracle-estimated") and report both gaps — the gap to the true
+    # oracle (perfect lengths) and the gap to the estimated oracle.  The
+    # spread between the two is the price of length-estimation error,
+    # separated from scheduling-decision error.
+    include_estimated: bool = True
 
     def sweep(self) -> Sweep:
         names = tuple(self.policies)
         if "oracle" not in names:
             names = names + ("oracle",)
-        return Sweep(base=self.base, regions=self.regions, seeds=self.seeds,
+        if self.include_estimated and "oracle-estimated" not in names:
+            names = names + ("oracle-estimated",)
+        base = self.base
+        if base.engine != self.engine:
+            base = dataclasses.replace(base, engine=self.engine)
+        return Sweep(base=base, regions=self.regions, seeds=self.seeds,
                      policies=names, forecasts=tuple(self.forecasts),
                      forecast_quantile=self.forecast_quantile,
                      baseline=self.baseline, backend=self.backend)
@@ -99,6 +118,8 @@ class OracleGap:
         cell = lambda r: (r["region"], r["seed"], r["fault"], r["forecast"])  # noqa: E731
         oracle_sv = {cell(r): r["savings_pct"]
                      for r in rows if r["policy"] == "oracle"}
+        est_sv = {cell(r): r["savings_pct"]
+                  for r in rows if r["policy"] == "oracle-estimated"}
         # per-cell SimResults, for attributing each gap by cause
         sims = {(cell(r), r["policy"]): s
                 for r, s in zip(res.rows_, res.results or ())}
@@ -116,6 +137,13 @@ class OracleGap:
                 "oracle_savings_pct": oracle_sv[cell(r)],
                 "gap_pp": round(oracle_sv[cell(r)] - r["savings_pct"], 3),
             }
+            # the second gap of the S1 "both gaps" report: distance to the
+            # oracle that only knows the learned length estimates — what a
+            # policy could still gain from better *decisions* alone
+            if r["policy"] != "oracle-estimated" and cell(r) in est_sv:
+                row["est_oracle_savings_pct"] = est_sv[cell(r)]
+                row["est_gap_pp"] = round(
+                    est_sv[cell(r)] - r["savings_pct"], 3)
             # Attribute the gap itself: the oracle "vs the policy as
             # baseline" decomposes the grams the oracle saves on top into
             # named causes — capacity_scaling is provisioning-phase loss,
@@ -178,6 +206,10 @@ class OracleGapResult:
                     "gap_mean_pp": round(float(gap.mean()), 3),
                     "gap_std_pp": round(float(gap.std()), 3),
                 }
+                est = [r["est_gap_pp"] for r in rs if "est_gap_pp" in r]
+                if est:
+                    out[fc][pol]["est_gap_mean_pp"] = round(
+                        float(np.mean(est)), 3)
                 atts = [r["gap_attribution_pp"] for r in rs
                         if "gap_attribution_pp" in r]
                 if atts:
@@ -202,13 +234,15 @@ class OracleGapResult:
 
     def table(self) -> str:
         lines = [f"{'forecast':22s} {'policy':20s} {'savings%':>9s} "
-                 f"{'gap pp':>7s} {'±std':>6s} {'cases':>6s}"]
+                 f"{'gap pp':>7s} {'±std':>6s} {'est pp':>7s} {'cases':>6s}"]
         for fc, pols in self.summary().items():
             for pol, s in pols.items():
+                est = (f"{s['est_gap_mean_pp']:7.2f}"
+                       if "est_gap_mean_pp" in s else " " * 7)
                 lines.append(
                     f"{fc:22s} {pol:20s} {s['savings_mean_pct']:9.2f} "
                     f"{s['gap_mean_pp']:7.2f} {s['gap_std_pp']:6.2f} "
-                    f"{s['n_cases']:6d}")
+                    f"{est} {s['n_cases']:6d}")
         return "\n".join(lines)
 
     def to_json(self, indent: int | None = 1) -> str:
@@ -231,25 +265,40 @@ def main() -> None:
     ap.add_argument("--tiny", action="store_true",
                     help="CI-scale smoke (small capacity, 1 seed, 2-point "
                          "ladder)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fastest end-to-end check (perfect forecast only, "
+                         "1 seed, MPC + greedy vs both oracles) — the CI "
+                         "tier-1 step")
     ap.add_argument("--seeds", type=int, default=3)
     ap.add_argument("--capacity", type=int, default=40)
     ap.add_argument("--region", default="south-australia")
+    ap.add_argument("--engine", default="scan",
+                    choices=("scan", "vector", "scalar"))
     ap.add_argument("--kind", default="noisy",
                     choices=("noisy", "quantile"))
     ap.add_argument("--out", default=None, help="write result JSON here")
     args = ap.parse_args()
 
-    if args.tiny:
+    if args.smoke:
+        base = Scenario(region=args.region, capacity=6, learn_weeks=1,
+                        family="alibaba", seed=101)
+        gap = OracleGap(base=base, seeds=(11,),
+                        policies=("carbonflex", "carbonflex-mpc",
+                                  "carbonflex-scale"),
+                        forecasts=sigma_ladder((0.0,)), engine=args.engine)
+    elif args.tiny:
         base = Scenario(region=args.region, capacity=8, learn_weeks=1,
                         family="alibaba", seed=101)
         gap = OracleGap(base=base, seeds=(11,),
-                        forecasts=sigma_ladder((0.0, 0.2), kind=args.kind))
+                        forecasts=sigma_ladder((0.0, 0.2), kind=args.kind),
+                        engine=args.engine)
     else:
         base = Scenario(region=args.region, capacity=args.capacity,
                         learn_weeks=2, seed=7)
         gap = OracleGap(base=base,
                         seeds=tuple(range(1, args.seeds + 1)),
-                        forecasts=sigma_ladder(kind=args.kind))
+                        forecasts=sigma_ladder(kind=args.kind),
+                        engine=args.engine)
     res = gap.run(progress=print)
     print(res.table())
     for pol in res.policies():

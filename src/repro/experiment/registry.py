@@ -24,7 +24,9 @@ from repro.core.carbon import CarbonService, MultiRegionCarbonService
 from repro.core.dag import DagCapPolicy, DagCarbonPolicy, DagFcfsPolicy
 from repro.core.geo import GeoFlexPolicy, GeoGreedyPolicy, GeoStaticPolicy
 from repro.core.knowledge import KnowledgeBase
+from repro.core.mpc import MPCConfig
 from repro.core.policy import (CarbonFlexMPCPolicy, CarbonFlexPolicy,
+                               CarbonFlexScalePolicy, EstimatedOraclePolicy,
                                OraclePolicy, Policy)
 from repro.core.types import ClusterConfig, GeoCluster, Job
 from repro.serving import (ServeFlexPolicy, ServeGreedyPolicy,
@@ -48,6 +50,8 @@ class PolicyContext:
     # Geo-scenario context (None for single-region scenarios).
     mci: MultiRegionCarbonService | None = None
     geo: GeoCluster | None = None
+    # MPC execution-phase knobs (Scenario.mpc); None = tuned defaults.
+    mpc: MPCConfig | None = None
 
     def require_kb(self) -> KnowledgeBase:
         if self.kb is None:
@@ -221,10 +225,29 @@ def _carbonflex_robust(ctx: PolicyContext) -> Policy:
                             name="carbonflex-robust")
 
 
-@register_policy("carbonflex-mpc", needs_history=True,
-                 description="rolling-horizon re-solve of Algorithm 1 (beyond paper)")
+@register_policy("carbonflex-mpc", needs_kb=True, needs_history=True,
+                 description="receding-horizon execution phase: run each "
+                             "job in its estimated-need cheapest forecast "
+                             "slots (beyond paper; core/mpc.py)")
 def _carbonflex_mpc(ctx: PolicyContext) -> Policy:
-    pol = CarbonFlexMPCPolicy()
+    cfg = ctx.mpc or MPCConfig()
+    if cfg.horizon == 0:
+        # no look-ahead degenerates to the KNN execution phase exactly —
+        # a bit-identity pinned by tests/test_mpc.py
+        return CarbonFlexPolicy(ctx.require_kb(), name="carbonflex-mpc")
+    pol = CarbonFlexMPCPolicy(cfg=cfg)
+    if ctx.history:
+        pol.warm_start(ctx.history)
+    return pol
+
+
+@register_policy("carbonflex-scale", needs_kb=True, needs_history=True,
+                 description="carbonflex-mpc + CarbonScaler marginal-"
+                             "capacity scale-up in clean forecast windows "
+                             "(rho learned from the KB's oracle curve)")
+def _carbonflex_scale(ctx: PolicyContext) -> Policy:
+    cfg = ctx.mpc or MPCConfig()
+    pol = CarbonFlexScalePolicy(cfg=cfg, kb=ctx.require_kb())
     if ctx.history:
         pol.warm_start(ctx.history)
     return pol
@@ -234,6 +257,19 @@ def _carbonflex_mpc(ctx: PolicyContext) -> Policy:
                  description="Algorithm 1 with full future knowledge (upper bound)")
 def _oracle(ctx: PolicyContext) -> Policy:
     return OraclePolicy(backend=ctx.backend)
+
+
+@register_policy("oracle-estimated", needs_history=True,
+                 description="Algorithm 1 with perfect CI but learned "
+                             "per-queue length estimates — separates "
+                             "timing skill from length clairvoyance in "
+                             "OracleGap")
+def _oracle_estimated(ctx: PolicyContext) -> Policy:
+    cfg = ctx.mpc or MPCConfig()
+    pol = EstimatedOraclePolicy(cfg=cfg, backend=ctx.backend)
+    if ctx.history:
+        pol.warm_start(ctx.history)
+    return pol
 
 
 # --- geo-distributed policies ------------------------------------------------

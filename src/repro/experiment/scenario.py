@@ -21,6 +21,7 @@ from repro.core.faults import (CarbonDataOutage, FaultProcess,
                                outage_from_dict, outage_to_dict)
 from repro.core.forecast import (ForecastModel, forecast_from_dict,
                                  forecast_to_dict)
+from repro.core.mpc import MPCConfig
 from repro.core.types import (ClusterConfig, GeoCluster, Job, MigrationModel,
                               QueueConfig, default_queues)
 from repro.serving import MaterializedServing, ServingConfig
@@ -153,6 +154,10 @@ class Scenario:
     # of a sweep into one vmapped device program.  Ignored by serving
     # scenarios (the serving engine has a single implementation).
     engine: str = "vector"
+    # Receding-horizon execution-phase knobs (core/mpc.py) consumed by the
+    # carbonflex-mpc / carbonflex-scale / oracle-estimated builders; None
+    # keeps the tuned defaults (MPCConfig()).
+    mpc: MPCConfig | None = None
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "regions", tuple(self.regions))
@@ -326,6 +331,8 @@ class Scenario:
         d["forecast"] = forecast_to_dict(self.forecast)
         if self.serving is not None:
             d["serving"] = dataclasses.asdict(self.serving)
+        if self.mpc is not None:
+            d["mpc"] = self.mpc.to_dict()
         return d
 
     @classmethod
@@ -348,6 +355,10 @@ class Scenario:
             d["forecast"] = forecast_from_dict(d["forecast"])
         if d.get("serving"):
             d["serving"] = ServingConfig(**d["serving"])
+        if d.get("mpc"):
+            d["mpc"] = MPCConfig.from_dict(d["mpc"])
+        else:
+            d.pop("mpc", None)
         return cls(**d)
 
     def to_json(self, indent: int | None = None) -> str:

@@ -15,6 +15,7 @@ import os
 
 from repro.core.forecast import (NoisyForecast, PerfectForecast,
                                  QuantileForecast)
+from repro.core.mpc import MPCConfig
 from repro.experiment import Scenario, ServingConfig, Sweep
 from repro.traces import DagConfig
 
@@ -25,6 +26,8 @@ FIXTURE_FORECAST = os.path.join(os.path.dirname(__file__), "data",
                                 "golden_sweep_forecast.json")
 FIXTURE_SERVING = os.path.join(os.path.dirname(__file__), "data",
                                "golden_sweep_serving.json")
+FIXTURE_MPC = os.path.join(os.path.dirname(__file__), "data",
+                           "golden_sweep_mpc.json")
 
 
 def golden_sweep() -> Sweep:
@@ -71,6 +74,23 @@ def golden_serving_sweep() -> Sweep:
                       learn_weeks=1, eval_weeks=1, seed=101),
         seeds=[11, 12],
         policies=["serve-static", "serve-greedy", "serve-flex"])
+
+
+def golden_mpc_sweep() -> Sweep:
+    """A small receding-horizon grid (ISSUE-10 satellite): 2 seeds x the
+    MPC policy family + the estimated oracle on the scan engine — pins
+    the precomputed decision tables, the marginal-capacity scale-up
+    energy replay, and the estimated-oracle plan end-to-end.  The
+    explicit ``scale_rho`` forces genuinely scaled cells (the learned
+    rho median licenses none on this workload), so the fixture pins the
+    k > k_min energy path, not just the degenerate k_min one."""
+    return Sweep(
+        base=Scenario(capacity=8, learn_weeks=1, family="alibaba",
+                      seed=101, engine="scan",
+                      mpc=MPCConfig(scale_rho=0.3)),
+        seeds=[11, 12],
+        policies=["carbon-agnostic", "carbonflex-mpc", "carbonflex-scale",
+                  "oracle-estimated"])
 
 
 def test_golden_sweep_reproduces_fixture_exactly():
@@ -130,6 +150,42 @@ def test_golden_sweeps_byte_identical_with_recorder_attached():
         assert sw.run().to_json() + "\n" == want, path
         assert len(tel.recorder) > 0, path
         assert tel.profiler.total() > 0, path
+
+
+def test_golden_mpc_sweep_reproduces_fixture_exactly():
+    with open(FIXTURE_MPC) as f:
+        want = json.load(f)
+    got = json.loads(golden_mpc_sweep().run().to_json())
+    assert got["baseline"] == want["baseline"] == "carbon-agnostic"
+    assert len(got["rows"]) == len(want["rows"]) == 8
+    for g, w in zip(got["rows"], want["rows"]):
+        assert g == w, f"row drifted: {(w['seed'], w['policy'])}"
+    assert got["summary"] == want["summary"]
+    assert got == want
+
+
+def test_mpc_fixture_shape_sanity():
+    with open(FIXTURE_MPC) as f:
+        want = json.load(f)
+    rows = want["rows"]
+    assert {r["policy"] for r in rows} == {"carbon-agnostic",
+                                           "carbonflex-mpc",
+                                           "carbonflex-scale",
+                                           "oracle-estimated"}
+    assert {r["seed"] for r in rows} == {11, 12}
+    assert all(r["carbon_g"] > 0 for r in rows)
+    mpc = [r for r in rows if r["policy"] == "carbonflex-mpc"]
+    assert all(r["savings_pct"] > 0 for r in mpc)
+
+
+def test_mpc_sweep_engine_parity_with_vector():
+    """The MPC golden grid is defined on the scan engine; the vector
+    engine must reproduce the identical payload (the fixture pins one
+    engine, this pins the other two against it transitively)."""
+    sw = golden_mpc_sweep()
+    sw_v = dataclasses.replace(
+        sw, base=dataclasses.replace(sw.base, engine="vector"))
+    assert sw_v.run().to_json() == sw.run().to_json()
 
 
 def test_dag_fixture_shape_sanity():
@@ -257,7 +313,8 @@ if __name__ == "__main__":
         for path, sweep in ((FIXTURE, golden_sweep()),
                             (FIXTURE_DAG, golden_dag_sweep()),
                             (FIXTURE_FORECAST, golden_forecast_sweep()),
-                            (FIXTURE_SERVING, golden_serving_sweep())):
+                            (FIXTURE_SERVING, golden_serving_sweep()),
+                            (FIXTURE_MPC, golden_mpc_sweep())):
             payload = sweep.run().to_json()
             with open(path, "w") as f:
                 f.write(payload)

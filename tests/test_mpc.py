@@ -1,0 +1,254 @@
+"""ISSUE 10: receding-horizon execution phase — MPC config validation,
+three-way engine parity for the new policies, registry pins, and the
+estimated-oracle mode.
+
+The MPC policies precompute all planning state into integer decision
+tables at window start, so scalar/vector/scan must agree bit-for-bit on
+every ``SimResult`` field — the same contract the older policies pin in
+``test_engine_parity.py`` — with and without fault injection and noisy
+forecast models."""
+import dataclasses
+import logging
+
+import numpy as np
+import pytest
+
+from repro.core import (CarbonFlexPolicy, CarbonService, ClusterConfig,
+                        KnowledgeBase, NoisyForecast, QuantileForecast,
+                        baselines, learn_window, simulate)
+from repro.core.mpc import (CarbonFlexMPCPolicy, CarbonFlexScalePolicy,
+                            EstimatedOraclePolicy, MPCConfig)
+from repro.core.scan_engine import native_kind
+from repro.core.simulator import FaultModel, SimCase, simulate_many
+from repro.experiment.registry import PolicyContext, make_policy
+from repro.traces import TraceSpec, generate_trace
+
+WEEK = 24 * 7
+CAP = 16
+
+
+@pytest.fixture(scope="module")
+def world():
+    cluster = ClusterConfig.default(capacity=CAP)
+    ci = CarbonService.synthetic("south-australia", WEEK * 3 + 24 * 30,
+                                 seed=31)
+    spec = TraceSpec(family="azure", hours=WEEK * 2, capacity=CAP, seed=32)
+    jobs = generate_trace(spec, cluster.queues)
+    hist = [j for j in jobs if j.arrival < WEEK]
+    ev = [j for j in jobs if WEEK <= j.arrival < WEEK * 2]
+    kb = KnowledgeBase()
+    learn_window(kb, hist, ci, 0, WEEK, cluster, backend="numpy")
+    return cluster, ci, hist, ev, kb
+
+
+def assert_results_identical(a, b, ctx=""):
+    assert a.carbon_g == b.carbon_g, ctx
+    assert a.energy_kwh == b.energy_kwh, ctx
+    np.testing.assert_array_equal(a.completion, b.completion, err_msg=ctx)
+    np.testing.assert_array_equal(a.violations, b.violations, err_msg=ctx)
+    np.testing.assert_array_equal(a.wait_slots, b.wait_slots, err_msg=ctx)
+    assert len(a.slots) == len(b.slots), ctx
+    for la, lb in zip(a.slots, b.slots):
+        assert la == lb, f"{ctx}: slot {la.slot}"
+
+
+# --- config ------------------------------------------------------------------
+
+
+def test_mpc_config_validation():
+    with pytest.raises(ValueError):
+        MPCConfig(horizon=-1)
+    with pytest.raises(ValueError):
+        MPCConfig(replan_every=0)
+    with pytest.raises(ValueError):
+        MPCConfig(max_done=0)
+    with pytest.raises(ValueError):
+        MPCConfig(clean_frac=1.5)
+    # horizon=0 is a valid *config* (the registry maps it to the plain
+    # policy) but not a valid planner
+    with pytest.raises(ValueError):
+        CarbonFlexMPCPolicy(cfg=MPCConfig(horizon=0))
+
+
+def test_mpc_config_round_trip():
+    cfg = MPCConfig(horizon=24, replan_every=6, percentile=75.0,
+                    clean_frac=0.4, scale_rho=0.3)
+    assert MPCConfig.from_dict(cfg.to_dict()) == cfg
+
+
+# --- three-way engine parity -------------------------------------------------
+
+FORECASTS = {"perfect": None,
+             "noisy": NoisyForecast(sigma=0.3, seed=5),
+             "quantile": QuantileForecast(sigma=0.3, seed=5, members=5)}
+CONFIGS = {"default": MPCConfig(),
+           # scale_rho forces genuinely scaled cells for carbonflex-scale
+           # (the learned rho median licenses none on this workload)
+           "short-coarse": MPCConfig(horizon=24, replan_every=6,
+                                     percentile=75.0, clean_frac=0.4,
+                                     scale_rho=0.3)}
+
+
+def _mk(policy_name, cfg, kb, hist):
+    if policy_name == "carbonflex-scale":
+        p = CarbonFlexScalePolicy(cfg=cfg, kb=kb)
+    else:
+        p = CarbonFlexMPCPolicy(cfg=cfg)
+    p.warm_start(hist)
+    return p
+
+
+@pytest.mark.parametrize("policy_name", ["carbonflex-mpc",
+                                         "carbonflex-scale"])
+@pytest.mark.parametrize("cfg_name", sorted(CONFIGS))
+@pytest.mark.parametrize("forecast", sorted(FORECASTS))
+def test_three_way_parity(world, policy_name, cfg_name, forecast):
+    cluster, ci, hist, ev, kb = world
+    ci_f = (ci if FORECASTS[forecast] is None
+            else dataclasses.replace(ci, model=FORECASTS[forecast]))
+    mk = lambda: _mk(policy_name, CONFIGS[cfg_name], kb, hist)  # noqa: E731
+    rs = simulate(ev, ci_f, cluster, mk(), t0=WEEK, horizon=WEEK,
+                  engine="scalar")
+    for engine in ("vector", "scan"):
+        rv = simulate(ev, ci_f, cluster, mk(), t0=WEEK, horizon=WEEK,
+                      engine=engine)
+        assert_results_identical(
+            rs, rv, f"{policy_name}/{cfg_name}/{forecast}/{engine}")
+        assert (rv.completion >= 0).all()
+
+
+@pytest.mark.parametrize("policy_name", ["carbonflex-mpc",
+                                         "carbonflex-scale"])
+def test_three_way_parity_under_faults(world, policy_name):
+    """Faulted cases delegate scan -> vector; all three must still agree."""
+    cluster, ci, hist, ev, kb = world
+    mk = lambda: _mk(policy_name, MPCConfig(), kb, hist)  # noqa: E731
+    mk_faults = lambda: FaultModel(straggler_rate=0.15, failure_rate=0.05,  # noqa: E731
+                                   seed=9)
+    rs = simulate(ev, ci, cluster, mk(), t0=WEEK, horizon=WEEK,
+                  engine="scalar", faults=mk_faults())
+    for engine in ("vector", "scan"):
+        rv = simulate(ev, ci, cluster, mk(), t0=WEEK, horizon=WEEK,
+                      engine=engine, faults=mk_faults())
+        assert_results_identical(rs, rv, f"{policy_name}+faults/{engine}")
+
+
+def test_mpc_beats_greedy_carbonflex(world):
+    """The point of the PR: receding-horizon planning burns less carbon
+    than greedy per-slot mimicry on the same world."""
+    cluster, ci, hist, ev, kb = world
+    base = simulate(ev, ci, cluster, baselines.CarbonAgnosticPolicy(),
+                    t0=WEEK, horizon=WEEK)
+    greedy = simulate(ev, ci, cluster, CarbonFlexPolicy(kb),
+                      t0=WEEK, horizon=WEEK)
+    mpc = _mk("carbonflex-mpc", MPCConfig(), kb, hist)
+    r = simulate(ev, ci, cluster, mpc, t0=WEEK, horizon=WEEK, engine="scan")
+    assert r.savings_vs(base) > greedy.savings_vs(base)
+
+
+# --- scan-native dispatch ----------------------------------------------------
+
+
+def test_native_kind_mpc(world):
+    cluster, ci, hist, ev, kb = world
+    mpc = _mk("carbonflex-mpc", MPCConfig(), kb, hist)
+    scale = _mk("carbonflex-scale", MPCConfig(), kb, hist)
+    assert native_kind(mpc, cluster, None) == "mpc"
+    assert native_kind(scale, cluster, None) == "mpc-scale"
+    # faulted cases delegate; greedy carbonflex was never scan-native
+    assert native_kind(mpc, cluster, FaultModel(seed=1)) is None
+    assert native_kind(CarbonFlexPolicy(kb), cluster, None) is None
+
+
+def test_scale_with_recorder_delegates_and_matches(world):
+    """mpc-scale + a decision-trace recorder runs through the vector
+    engine (scan slot events assume k == k_min) — bit-identically."""
+    from repro.telemetry import MemoryRecorder, Telemetry
+
+    cluster, ci, hist, ev, kb = world
+    rs = simulate(ev, ci, cluster,
+                  _mk("carbonflex-scale", MPCConfig(), kb, hist),
+                  t0=WEEK, horizon=WEEK, engine="scalar")
+    tel = Telemetry(recorder=MemoryRecorder()).for_run("scale")
+    rv = simulate(ev, ci, cluster,
+                  _mk("carbonflex-scale", MPCConfig(), kb, hist),
+                  t0=WEEK, horizon=WEEK, engine="scan", telemetry=tel)
+    assert_results_identical(rs, rv, "scale+recorder")
+    assert len(tel.recorder) > 0
+
+
+def test_scan_batch_logs_delegation_once(world, caplog):
+    """A scan batch with non-native cells reports the silent vector
+    fallback exactly once per dispatch (ISSUE 10 S2)."""
+    cluster, ci, hist, ev, kb = world
+    cases = [SimCase(jobs=ev, ci=ci, cluster=cluster,
+                     policy=CarbonFlexPolicy(kb), t0=WEEK, horizon=WEEK,
+                     engine="scan", label="carbonflex"),
+             SimCase(jobs=ev, ci=ci, cluster=cluster,
+                     policy=_mk("carbonflex-mpc", MPCConfig(), kb, hist),
+                     t0=WEEK, horizon=WEEK, engine="scan", label="mpc")]
+    with caplog.at_level(logging.INFO, logger="repro.core.scan_engine"):
+        simulate_many(cases)
+    recs = [r for r in caplog.records if "delegated" in r.getMessage()]
+    assert len(recs) == 1
+    assert "carbonflex" in recs[0].getMessage()
+    assert "mpc x" not in recs[0].getMessage()
+
+
+# --- registry pins -----------------------------------------------------------
+
+
+def _ctx(world, mpc_cfg=None):
+    cluster, ci, hist, ev, kb = world
+    return PolicyContext(cluster=cluster, ci=ci, history=list(hist),
+                         kb=kb, mpc=mpc_cfg)
+
+
+def test_registry_horizon0_pins_to_plain_carbonflex(world):
+    """MPCConfig(horizon=0) degenerates to greedy mimicry: the registry
+    hands back a plain CarbonFlexPolicy (so `carbonflex-mpc` at horizon 0
+    is bit-identical to `carbonflex`), keeping the knob ladder anchored."""
+    cluster, ci, hist, ev, kb = world
+    pol = make_policy("carbonflex-mpc", _ctx(world, MPCConfig(horizon=0)))
+    assert type(pol) is CarbonFlexPolicy
+    assert pol.name == "carbonflex-mpc"
+    ra = simulate(ev, ci, cluster, pol, t0=WEEK, horizon=WEEK)
+    rb = simulate(ev, ci, cluster, CarbonFlexPolicy(kb), t0=WEEK,
+                  horizon=WEEK)
+    assert_results_identical(ra, rb, "horizon0-pin")
+
+
+def test_registry_builds_mpc_family(world):
+    mpc = make_policy("carbonflex-mpc", _ctx(world))
+    scale = make_policy("carbonflex-scale", _ctx(world))
+    est = make_policy("oracle-estimated", _ctx(world))
+    assert type(mpc) is CarbonFlexMPCPolicy
+    assert type(scale) is CarbonFlexScalePolicy
+    assert type(est) is EstimatedOraclePolicy
+    # warm-started from ctx.history, not the bare prior
+    assert any(len(h) > 1 for h in mpc._hist.values())
+    cfg = MPCConfig(horizon=24, replan_every=6)
+    assert make_policy("carbonflex-mpc", _ctx(world, cfg)).cfg == cfg
+
+
+# --- estimated oracle (S1) ---------------------------------------------------
+
+
+def test_estimated_oracle_runs_and_saves(world):
+    cluster, ci, hist, ev, kb = world
+    base = simulate(ev, ci, cluster, baselines.CarbonAgnosticPolicy(),
+                    t0=WEEK, horizon=WEEK)
+    pol = EstimatedOraclePolicy()
+    pol.warm_start(hist)
+    rs = simulate(ev, ci, cluster, pol, t0=WEEK, horizon=WEEK,
+                  engine="scalar")
+    assert (rs.completion >= 0).all()
+    assert rs.savings_vs(base) > 0
+    # not packed-safe: the vector/scan engines take the per-slot decide
+    # path and must agree with the scalar reference
+    for engine in ("vector", "scan"):
+        pol2 = EstimatedOraclePolicy()
+        pol2.warm_start(hist)
+        rv = simulate(ev, ci, cluster, pol2, t0=WEEK, horizon=WEEK,
+                      engine=engine)
+        assert_results_identical(rs, rv, f"oracle-estimated/{engine}")
